@@ -1,0 +1,87 @@
+"""Aggregate dry-run records into the roofline table (EXPERIMENTS.md
+§Roofline reads this output).
+
+  PYTHONPATH=src python -m benchmarks.roofline --dir benchmarks/out
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load(dir_: str) -> List[Dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def _fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/2**30:.2f}"
+
+
+def table(records: List[Dict], mesh: str = "pod16x16") -> str:
+    lines = [
+        "| arch | shape | dom | compute_s | memory_s | coll_s | "
+        "useful/HLO | roofline frac | HBM GiB/dev | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(records, key=lambda x: (x["arch"], x["shape"])):
+        if r.get("mesh_name", r.get("mesh")) not in (mesh,) and \
+           not (isinstance(r.get("mesh"), str) and r["mesh"] == mesh):
+            continue
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — |"
+                         f" — | — | — | {r['skipped'][:40]} |")
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | ERR | | | | | |"
+                         f" | {r['error'].splitlines()[-1][:60]} |")
+            continue
+        ro = r["roofline"]
+        pd = r["per_device"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {ro['dominant'][:-2]} "
+            f"| {ro['compute_s']:.3f} | {ro['memory_s']:.3f} "
+            f"| {ro['collective_s']:.3f} | {ro['hlo_useful_ratio']:.2f} "
+            f"| {ro['roofline_fraction']:.3f} "
+            f"| {_fmt_bytes(pd.get('peak_bytes'))} | |")
+    return "\n".join(lines)
+
+
+def summary(records: List[Dict]) -> Dict:
+    ok = [r for r in records if "roofline" in r]
+    skip = [r for r in records if "skipped" in r]
+    err = [r for r in records if "error" in r]
+    worst = sorted(ok, key=lambda r: r["roofline"]["roofline_fraction"])
+    coll = sorted(ok, key=lambda r: -r["roofline"]["collective_s"])
+    return dict(
+        n_ok=len(ok), n_skip=len(skip), n_err=len(err),
+        worst_fraction=[(r["arch"], r["shape"], r.get("mesh_name"),
+                         round(r["roofline"]["roofline_fraction"], 4))
+                        for r in worst[:5]],
+        most_collective=[(r["arch"], r["shape"], r.get("mesh_name"),
+                          round(r["roofline"]["collective_s"], 3))
+                         for r in coll[:5]],
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="benchmarks/out")
+    ap.add_argument("--mesh", default="pod16x16")
+    args = ap.parse_args()
+    records = load(args.dir)
+    print(table(records, args.mesh))
+    print()
+    print(json.dumps(summary(records), indent=1))
+
+
+if __name__ == "__main__":
+    main()

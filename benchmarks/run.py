@@ -1,0 +1,41 @@
+"""Benchmark runner — one harness per paper figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. ``--full`` uses the paper's
+exact sizes (5000 streams etc.); default sizes finish in ~2 minutes on one
+CPU core. Dry-run/roofline cells are produced separately by
+``python -m repro.launch.dryrun --all`` (they need 512 fake devices).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (5000 streams)")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig5,fig6,fig7,fig8")
+    args = ap.parse_args(argv)
+
+    from . import fig5_scalability, fig6_dft_workflow, fig7_coreset, \
+        fig8_sdeaas
+
+    figs = dict(fig5=fig5_scalability, fig6=fig6_dft_workflow,
+                fig7=fig7_coreset, fig8=fig8_sdeaas)
+    only = set(args.only.split(",")) if args.only else set(figs)
+
+    print("name,us_per_call,derived")
+    for name, mod in figs.items():
+        if name not in only:
+            continue
+        try:
+            for row in mod.run(full=args.full):
+                print(row, flush=True)
+        except Exception as e:  # keep the harness running
+            print(f"{name}_ERROR,0,{e!r}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

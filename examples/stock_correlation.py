@@ -1,0 +1,74 @@
+"""The paper's flagship workflow (Figure 4): discover correlated groups
+among N stock streams using SDE.DFT bucketing instead of exact O(N^2 w)
+pairwise Pearson — with zero false dismissals.
+
+  PYTHONPATH=src python examples/stock_correlation.py --streams 1000
+"""
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import core
+from repro.core import batched
+from repro.core.dft import pairwise_corr, adjacent_bucket_mask
+from repro.streams import StockStream
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--streams", type=int, default=500)
+    ap.add_argument("--window", type=int, default=64)
+    ap.add_argument("--threshold", type=float, default=0.9)
+    args = ap.parse_args(argv)
+    n = args.streams
+
+    stock = StockStream(n_streams=n, group_size=10, noise=0.2, seed=7)
+    kind = core.DFT(window=args.window, n_coeffs=8,
+                    threshold=args.threshold)
+
+    # maintain DFT synopses for all N streams (one vmapped state)
+    states = batched.stacked_init(kind, n)
+    step = jax.jit(lambda st, v: batched.stacked_step(
+        kind, st, v, jnp.ones(n, bool)))
+    series = stock.ticks(args.window * 3)
+    t0 = time.time()
+    for t in range(series.shape[0]):
+        states = step(states, jnp.asarray(series[t]))
+    jax.block_until_ready(states)
+    print(f"maintained {n} DFT synopses over {series.shape[0]} ticks "
+          f"in {time.time()-t0:.2f}s")
+
+    # bucketize + prune + estimate
+    coeffs = jax.vmap(kind.normalized_coeffs)(states)
+    coords = np.asarray(jax.vmap(
+        lambda s: kind.bucket_of(kind.normalized_coeffs(s))[0])(states))
+    cand = np.asarray(adjacent_bucket_mask(jnp.asarray(coords)))
+    corr = np.asarray(pairwise_corr(coeffs))
+    iu = np.triu_indices(n, 1)
+    hot = cand[iu] & (corr[iu] >= args.threshold)
+    pairs = [(int(a), int(b)) for a, b, h in zip(*iu, hot) if h]
+    print(f"candidate fraction after bucket pruning: {cand[iu].mean():.3f}")
+    print(f"correlated pairs found: {len(pairs)}")
+
+    # validate vs exact Pearson on raw windows
+    w = series[-args.window:].T
+    wn = w - w.mean(1, keepdims=True)
+    wn /= np.maximum(np.linalg.norm(wn, axis=1, keepdims=True), 1e-9)
+    exact = wn @ wn.T
+    true_pairs = {(int(a), int(b)) for a, b in zip(*iu)
+                  if exact[a, b] >= args.threshold}
+    missed = true_pairs - set(pairs)
+    same_group = sum(1 for a, b in pairs
+                     if stock.group_of(a) == stock.group_of(b))
+    print(f"true pairs >= {args.threshold}: {len(true_pairs)}; "
+          f"missed by pruning: {len(missed)} (must be 0)")
+    print(f"within-planted-group pairs among found: "
+          f"{same_group}/{len(pairs)}")
+    assert not missed, "no-false-dismissal property violated!"
+
+
+if __name__ == "__main__":
+    main()

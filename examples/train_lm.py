@@ -1,0 +1,78 @@
+"""End-to-end training example: train a qwen2-family model for a few
+hundred steps with the full substrate — atomic/async checkpoints, exact
+resume, and SDE telemetry (gradient AMS sketch + DFT metric monitor: the
+paper's engine serving an ML workflow).
+
+Defaults are CPU-sized (~10M params); `--d-model 768 --layers 12` gives
+~100M. The same code path scales to the production mesh (the dry-run
+proves the full-size programs compile).
+
+  PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, reduced
+from repro.streams import TokenPipeline
+from repro.training import (OptConfig, MetricMonitor, init_train_state,
+                            make_train_step)
+from repro.training import checkpoint as ckpt
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = ap.parse_args(argv)
+
+    cfg = reduced(ARCHS["qwen2-0.5b"],
+                  d_model=args.d_model, n_layers=args.layers,
+                  n_heads=max(args.d_model // 64, 2), n_kv_heads=2,
+                  head_dim=64, d_ff=args.d_model * 4, vocab=8192)
+    print(f"model: {cfg.param_count()/1e6:.1f}M params "
+          f"({cfg.n_layers}L x {cfg.d_model}d, qwen2 family)")
+
+    opt = OptConfig(lr=1e-3, warmup_steps=args.steps // 20 + 1,
+                    total_steps=args.steps)
+    state = init_train_state(cfg, opt, jax.random.PRNGKey(0))
+    pipe = TokenPipeline(vocab=cfg.vocab, seq_len=args.seq,
+                         batch=args.batch, seed=0)
+    start = 0
+    if ckpt.latest_step(args.ckpt) is not None:
+        state, man = ckpt.restore(state, args.ckpt)
+        pipe.restore(man["pipeline"])
+        start = man["step"]
+        print(f"resumed from step {start}")
+
+    step_fn = jax.jit(make_train_step(cfg, opt))
+    mon = MetricMonitor(window=32)
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+        state, m = step_fn(state, batch)
+        mon.observe({k: float(v) for k, v in m.items() if np.ndim(v) == 0})
+        if (step + 1) % 25 == 0:
+            tok_s = args.batch * args.seq * 25 / (time.time() - t0)
+            print(f"step {step+1:4d}  loss {float(m['loss']):.4f}  "
+                  f"gradL2(sketch) {float(m['sketch_l2_est']):.1f}  "
+                  f"{tok_s:,.0f} tok/s", flush=True)
+            t0 = time.time()
+        if (step + 1) % 100 == 0:
+            ckpt.save(state, args.ckpt, step + 1,
+                      extra_manifest={"pipeline": pipe.state()},
+                      async_=True)
+    print("SDE monitor correlated metrics:", mon.correlated_groups())
+    print(f"distinct tokens seen (HLL estimate): "
+          f"{pipe.distinct_tokens():,.0f}")
+
+
+if __name__ == "__main__":
+    main()

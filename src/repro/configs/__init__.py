@@ -1,0 +1,27 @@
+# Assigned architectures (public-literature configs) + shape sets.
+from .base import ModelConfig, ShapeConfig, SHAPES, reduced
+from .chameleon_34b import CONFIG as chameleon_34b
+from .jamba_v01_52b import CONFIG as jamba_v01_52b
+from .musicgen_large import CONFIG as musicgen_large
+from .grok1_314b import CONFIG as grok1_314b
+from .arctic_480b import CONFIG as arctic_480b
+from .stablelm_3b import CONFIG as stablelm_3b
+from .qwen2_05b import CONFIG as qwen2_05b
+from .gemma_7b import CONFIG as gemma_7b
+from .qwen2_72b import CONFIG as qwen2_72b
+from .mamba2_27b import CONFIG as mamba2_27b
+
+ARCHS = {
+    "chameleon-34b": chameleon_34b,
+    "jamba-v0.1-52b": jamba_v01_52b,
+    "musicgen-large": musicgen_large,
+    "grok-1-314b": grok1_314b,
+    "arctic-480b": arctic_480b,
+    "stablelm-3b": stablelm_3b,
+    "qwen2-0.5b": qwen2_05b,
+    "gemma-7b": gemma_7b,
+    "qwen2-72b": qwen2_72b,
+    "mamba2-2.7b": mamba2_27b,
+}
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "ARCHS", "reduced"]

@@ -1,0 +1,13 @@
+"""Snowflake Arctic 480B [hf:Snowflake/snowflake-arctic-base] — dense-MoE
+hybrid: 128 experts top-2 in parallel with a dense residual MLP."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b", family="moe",
+    n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8,
+    d_ff=4864, vocab=32000,
+    n_experts=128, top_k=2,
+    moe_dense_residual=True, d_ff_dense=4864,
+    expert_axis="model",
+    seq_shard_activations=True, optimizer="adamw8bit",
+)

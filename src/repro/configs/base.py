@@ -1,0 +1,198 @@
+"""Model / run configuration system.
+
+One frozen dataclass describes an architecture; per-arch files under
+repro/configs instantiate it with the exact assigned hyperparameters.
+`layer_plan` expands the config into the per-layer (mixer, ffn) plan the
+model builder consumes; `param_count` feeds MODEL_FLOPS for the roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0            # 0 => d_model // n_heads
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    moe_every: int = 1           # MoE ffn every k-th layer (jamba: 2)
+    moe_dense_residual: bool = False     # arctic: dense MLP || MoE
+    d_ff_dense: int = 0                  # arctic residual MLP width
+    capacity_factor: float = 1.25
+    # --- SSM (mamba2 / hybrid) ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 64
+    conv_width: int = 4
+    attn_every: int = 0          # hybrid: 1 attn layer per k layers (jamba 8)
+    # --- flavors ---
+    qkv_bias: bool = False       # qwen2
+    mlp_act: str = "swiglu"      # swiglu | geglu
+    frontend: str = "tokens"     # tokens | embeds (audio/vlm stub)
+    tie_embeddings: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    # --- sharding / memory policy (large-scale runnability knobs) ---
+    seq_shard_activations: bool = False   # SP on the residual stream
+    attn_layout: str = "seq"              # seq (ring-ish) | head (TP-gather)
+    dense_fsdp: bool = True               # FSDP the non-MoE weights
+    tensor_parallel: bool = True          # False => DP/FSDP only (small
+    #                                       models: TP-16 over-sharding
+    #                                       makes collectives dominate)
+    expert_axis: Optional[str] = "model"  # None => experts FSDP-only
+    remat: bool = True
+    optimizer: str = "adamw"              # adamw | adamw8bit
+    sub_quadratic: bool = False           # True for ssm/hybrid (long_500k ok)
+
+    @property
+    def hd(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    # ------------------------------------------------------------------
+    def layer_plan(self) -> List[Tuple[str, str]]:
+        """Per-layer (mixer, ffn) plan.
+
+        dense/moe:  ("attn", "dense"|"moe") every layer
+        ssm:        ("mamba", "none") every layer
+        hybrid:     attn every `attn_every` (jamba: layer i%8==3), rest
+                    mamba; ffn alternates dense/moe every `moe_every`.
+        """
+        plan = []
+        for i in range(self.n_layers):
+            if self.family == "ssm":
+                plan.append(("mamba", "none"))
+                continue
+            if self.family == "hybrid":
+                mixer = "attn" if (i % self.attn_every
+                                   == self.attn_every // 2) else "mamba"
+            else:
+                mixer = "attn"
+            if self.n_experts and (i % self.moe_every == self.moe_every - 1):
+                plan.append((mixer, "moe"))
+            else:
+                plan.append((mixer, "dense"))
+        return plan
+
+    def period(self) -> int:
+        """Repeating period for scan-over-layers weight stacking."""
+        plan = self.layer_plan()
+        for p in range(1, len(plan) + 1):
+            if len(plan) % p == 0 and all(
+                    plan[i] == plan[i % p] for i in range(len(plan))):
+                return p
+        return len(plan)
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Total parameters (embeddings included)."""
+        d, hd = self.d_model, self.hd
+        total = self.vocab * d                       # embed
+        if not self.tie_embeddings:
+            total += self.vocab * d                  # unembed
+        if self.frontend == "embeds":
+            total += d * d                           # modality stub proj
+        for mixer, ffn in self.layer_plan():
+            if mixer == "attn":
+                q = d * self.n_heads * hd
+                kv = 2 * d * self.n_kv_heads * hd
+                o = self.n_heads * hd * d
+                total += q + kv + o + d              # + norm
+                if self.qkv_bias:
+                    total += (self.n_heads + 2 * self.n_kv_heads) * hd
+            elif mixer == "mamba":
+                din, ns, nh = self.d_inner, self.ssm_state, self.ssm_heads
+                total += d * (2 * din + 2 * ns + nh)   # in_proj (x,z,B,C,dt)
+                total += self.conv_width * (din + 2 * ns)  # conv
+                total += din * d                     # out proj
+                total += 2 * nh + din + d            # A, D, norm, blocknorm
+            if ffn == "dense":
+                total += 3 * d * self.d_ff + d
+            elif ffn == "moe":
+                total += d * self.n_experts          # router
+                total += self.n_experts * 3 * d * self.d_ff + d
+                if self.moe_dense_residual:
+                    total += 3 * d * (self.d_ff_dense or self.d_ff)
+        total += d                                   # final norm
+        return total
+
+    def expert_param_count(self) -> int:
+        """Parameters living in expert weight stacks (EP-managed)."""
+        if not self.n_experts:
+            return 0
+        moe_layers = sum(1 for _, f in self.layer_plan() if f == "moe")
+        return moe_layers * self.n_experts * 3 * self.d_model * self.d_ff
+
+    def dense_param_count(self) -> int:
+        return self.param_count() - self.expert_param_count()
+
+    def active_param_count(self) -> int:
+        """Activated parameters per token (MoE top-k) for MODEL_FLOPS."""
+        if not self.n_experts:
+            return self.param_count()
+        d = self.d_model
+        full = self.param_count()
+        moe_layers = sum(1 for _, f in self.layer_plan() if f == "moe")
+        all_exp = moe_layers * self.n_experts * 3 * d * self.d_ff
+        act_exp = moe_layers * self.top_k * 3 * d * self.d_ff
+        return full - all_exp + act_exp
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                    # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests."""
+    base = dict(
+        n_layers=min(cfg.n_layers, 4 if cfg.family != "hybrid"
+                     else max(cfg.attn_every, 4)),
+        d_model=128,
+        n_heads=4, n_kv_heads=min(cfg.n_kv_heads, 2) or 2,
+        head_dim=32,
+        d_ff=256, d_ff_dense=128 if cfg.moe_dense_residual else 0,
+        vocab=512,
+        n_experts=min(cfg.n_experts, 4),
+        ssm_state=min(cfg.ssm_state, 16) if cfg.ssm_state else 0,
+        ssm_head_dim=32, ssm_chunk=16,
+        seq_shard_activations=False,
+        remat=False,
+    )
+    if cfg.family == "hybrid":
+        base["attn_every"] = min(cfg.attn_every, 4)
+        base["n_layers"] = 2 * base["attn_every"]
+    base.update(overrides)
+    return dataclasses.replace(cfg, **base)

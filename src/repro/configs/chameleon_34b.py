@@ -1,0 +1,12 @@
+"""Chameleon-34B [arXiv:2405.09818] — early-fusion VLM; VQ image tokens
+share the 65536 vocab. Backbone only; patch frontend is a stub providing
+precomputed embeddings (input_specs)."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b", family="vlm",
+    n_layers=48, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=22016, vocab=65536,
+    frontend="embeds",
+    seq_shard_activations=True, optimizer="adamw8bit",
+)

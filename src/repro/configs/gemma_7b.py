@@ -1,0 +1,11 @@
+"""Gemma-7B [arXiv:2403.08295] — GeGLU, head_dim=256 (q/k/v project to
+n_heads*256 = 4096 != d_model)."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-7b", family="dense",
+    n_layers=28, d_model=3072, n_heads=16, n_kv_heads=16,
+    d_ff=24576, vocab=256000, head_dim=256,
+    mlp_act="geglu",
+    tensor_parallel=False,   # 9.3B: measured better DP/FSDP-only (see §Perf)
+)

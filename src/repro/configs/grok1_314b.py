@@ -1,0 +1,13 @@
+"""Grok-1 314B [hf:xai-org/grok-1] — MoE 8 experts top-2.
+8 experts < 16-way model axis => experts are FSDP/TP-sharded on their
+inner dims instead of an expert axis (expert_axis=None)."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b", family="moe",
+    n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=32768, vocab=131072,
+    n_experts=8, top_k=2,
+    expert_axis=None,
+    seq_shard_activations=True, optimizer="adamw8bit",
+)

@@ -1,0 +1,19 @@
+"""Jamba-v0.1 52B [arXiv:2403.19887] — 1:7 attn:mamba interleave, MoE 16e
+top-2 every other layer. Sub-quadratic => runs long_500k."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b", family="hybrid",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab=65536,
+    n_experts=16, top_k=2, moe_every=2,
+    ssm_state=16, ssm_head_dim=64, ssm_expand=2, ssm_chunk=64,
+    attn_every=8,
+    attn_layout="head",
+    seq_shard_activations=False, optimizer="adamw8bit",
+    # non-MoE params are ~6.5B: TP-only sharding avoids the d_model-
+    # contraction all-reduces FSDP induces (§Perf iteration 4); the ~45B
+    # of expert weights stay FSDP-sharded inside moe_ffn_shardmap.
+    dense_fsdp=False,
+    sub_quadratic=True,
+)

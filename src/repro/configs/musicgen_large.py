@@ -1,0 +1,11 @@
+"""MusicGen-large [arXiv:2306.05284] — decoder-only over EnCodec tokens;
+audio frontend is a stub providing precomputed frame embeddings."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large", family="audio",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=32,
+    d_ff=8192, vocab=2048,
+    frontend="embeds",
+    tensor_parallel=False,   # 3.2B: DP/FSDP only
+)

@@ -1,0 +1,43 @@
+# The paper's primary contribution: a mergeable synopses engine in JAX.
+# Every kind from Table 1 of the paper is registered here; Load Synopsis
+# pluggability goes through synopsis.register_kind at runtime.
+from . import hashing  # noqa: F401
+from .synopsis import (Synopsis, register_kind, make_kind, known_kinds,
+                       kind_params)  # noqa: F401
+from .countmin import CountMin
+from .hll import HyperLogLog
+from .ams import AMS
+from .bloom import BloomFilter
+from .fm import FMSketch
+from .dft import DFT
+from .rhp import RHP
+from .lossy import LossyCounting
+from .sticky import StickySampling
+from .sampler import ReservoirSampler
+from .gk import GKQuantiles
+from .coreset import CoreSetTree
+from .window import PaneWindow
+from . import batched, federated  # noqa: F401
+
+for _name, _factory in {
+    "countmin": CountMin,
+    "hyperloglog": HyperLogLog,
+    "ams": AMS,
+    "bloom": BloomFilter,
+    "fm": FMSketch,
+    "dft": DFT,
+    "rhp": RHP,
+    "lossy_counting": LossyCounting,
+    "sticky_sampling": StickySampling,
+    "chain_sampler": ReservoirSampler,
+    "gk_quantiles": GKQuantiles,
+    "coreset_tree": CoreSetTree,
+}.items():
+    register_kind(_name, _factory)
+
+__all__ = [
+    "Synopsis", "register_kind", "make_kind", "known_kinds", "kind_params",
+    "CountMin", "HyperLogLog", "AMS", "BloomFilter", "FMSketch", "DFT",
+    "RHP", "LossyCounting", "StickySampling", "ReservoirSampler",
+    "GKQuantiles", "CoreSetTree", "PaneWindow", "batched", "federated",
+]

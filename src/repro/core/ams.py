@@ -1,0 +1,91 @@
+"""AMS sketch [Alon, Matias, Szegedy 1996] — L2 norm / inner product.
+
+Fast-AMS / count-sketch layout: d independent rows of w counters; each
+update adds sign_j(x) * v to counter [j, h_j(x)]. Row estimate of <u, v>
+is the row dot product; the final estimate is the median over rows
+(the paper's Section 7 formula). w = O(1/eps^2), d = O(log 1/delta).
+
+Merge = elementwise addition (linear sketch) — this linearity is also why
+AMS gradient sketches merge across data-parallel workers with one psum.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import hashing
+
+
+@dataclasses.dataclass(frozen=True)
+class AMS:
+    eps: float = 0.05
+    delta: float = 0.05
+    seed: int = 13
+
+    merge_mode = "sum"
+
+    @property
+    def depth(self) -> int:
+        return max(1, int(math.ceil(4.0 * math.log(1.0 / self.delta))))
+
+    @property
+    def log2_width(self) -> int:
+        return max(1, int(math.ceil(math.log2(max(2.0, 4.0 / self.eps ** 2)))))
+
+    @property
+    def width(self) -> int:
+        return 1 << self.log2_width
+
+    def _seeds(self) -> jax.Array:
+        return jnp.asarray(hashing.row_seeds(self.seed, self.depth))
+
+    def init(self, key: jax.Array | None = None) -> jax.Array:
+        del key
+        return jnp.zeros((self.depth, self.width), dtype=jnp.float32)
+
+    def add_batch(self, state: jax.Array, items: jax.Array,
+                  values: jax.Array, mask: jax.Array) -> jax.Array:
+        seeds = self._seeds()
+        idx = hashing.bucket_hash(items, seeds, self.log2_width)   # [T,d]
+        sgn = hashing.sign_hash(items, seeds)                       # [T,d]
+        v = (values * mask.astype(jnp.float32))[:, None] * sgn      # [T,d]
+        rows = jnp.arange(self.depth)[None, :]
+        return state.at[rows, idx].add(v)
+
+    def stacked_add_batch(self, state, syn_idx, items, values, mask):
+        seeds = self._seeds()
+        idx = hashing.bucket_hash(items, seeds, self.log2_width)
+        sgn = hashing.sign_hash(items, seeds)
+        v = (values * mask.astype(jnp.float32))[:, None] * sgn
+        rows = jnp.arange(self.depth)[None, :]
+        return state.at[syn_idx[:, None], rows, idx].add(v)
+
+    def add_dense(self, state: jax.Array, vec: jax.Array) -> jax.Array:
+        """Sketch a dense vector (gradient sketching): item ids = positions."""
+        items = jnp.arange(vec.shape[0], dtype=jnp.uint32)
+        return self.add_batch(state, items, vec, jnp.ones_like(vec, dtype=bool))
+
+    def estimate(self, state: jax.Array) -> jax.Array:
+        """L2-norm^2 estimate (self inner product)."""
+        return self.inner_product(state, state)
+
+    def inner_product(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        row = jnp.sum(a * b, axis=-1)          # [d]
+        return jnp.median(row)
+
+    def point_query(self, state: jax.Array, items: jax.Array) -> jax.Array:
+        """Count-sketch point frequency estimate (median of sign*counter)."""
+        seeds = self._seeds()
+        idx = hashing.bucket_hash(items, seeds, self.log2_width)
+        sgn = hashing.sign_hash(items, seeds)
+        rows = jnp.arange(self.depth)[None, :]
+        return jnp.median(state[rows, idx] * sgn, axis=-1)
+
+    def merge(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        return a + b
+
+    def memory_bytes(self) -> int:
+        return self.depth * self.width * 4

@@ -1,0 +1,69 @@
+"""Stacked maintenance of thousands of synopses of one kind.
+
+This is the TPU analogue of Flink slot sharing (paper Section 6, "...And
+One SDEaaS For All"): all synopses of a kind live in ONE stacked pytree
+with a leading [capacity] axis, and a single compiled program updates all
+of them. Adding a synopsis assigns a row; growing past capacity doubles
+the stack (amortized re-jit), mirroring "a request for a new synopsis
+assigns new tasks, not task slots".
+
+Routing: a batch of (syn_idx, item, value) tuples updates rows via the
+kind's ``stacked_add_batch`` scatter path when available (CM/HLL/AMS/
+Bloom/FM/RHP), else via a generic vmap fallback where each row consumes
+the full batch masked to its own tuples (scan-based kinds).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .synopsis import Synopsis
+
+
+def stacked_init(kind: Synopsis, capacity: int) -> Any:
+    proto = kind.init(None)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (capacity,) + x.shape).copy(), proto)
+
+
+def grow(stacked: Any, new_capacity: int) -> Any:
+    def g(x):
+        pad = [(0, new_capacity - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
+        return jnp.pad(x, pad)
+    return jax.tree.map(g, stacked)
+
+
+def stacked_add_batch(kind: Synopsis, stacked: Any, syn_idx: jax.Array,
+                      items: jax.Array, values: jax.Array,
+                      mask: jax.Array) -> Any:
+    if hasattr(kind, "stacked_add_batch"):
+        return kind.stacked_add_batch(stacked, syn_idx, items, values, mask)
+    # generic fallback: every row sees the batch masked to its tuples
+    capacity = jax.tree.leaves(stacked)[0].shape[0]
+
+    def per_row(row_state, row_id):
+        row_mask = mask & (syn_idx == row_id)
+        return kind.add_batch(row_state, items, values, row_mask)
+
+    return jax.vmap(per_row)(stacked, jnp.arange(capacity))
+
+
+def stacked_step(kind: Synopsis, stacked: Any, values: jax.Array,
+                 mask: jax.Array) -> Any:
+    """Time-series path: one tick per stream per step (DFT & friends)."""
+    return jax.vmap(kind.step)(stacked, values, mask)
+
+
+def stacked_estimate(kind: Synopsis, stacked: Any, *args: Any) -> Any:
+    return jax.vmap(lambda s: kind.estimate(s, *args))(stacked)
+
+
+def stacked_row(stacked: Any, row: int) -> Any:
+    return jax.tree.map(lambda x: x[row], stacked)
+
+
+def set_row(stacked: Any, row: int, state: Any) -> Any:
+    return jax.tree.map(lambda x, v: x.at[row].set(v), stacked, state)

@@ -1,0 +1,71 @@
+"""Bloom filter [Bloom 1970] — set membership.
+
+Parameters per the paper's Table 1: (#elements n, false-positive rate fpr)
+=> m = ceil(-n ln fpr / ln(2)^2) bits, k = round(m/n ln 2) hash functions.
+Bits are stored as an int32 0/1 vector (TPU-friendly; packing to words is a
+serialization concern, handled by the checkpoint layer).
+
+Merge = elementwise OR.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import hashing
+
+
+@dataclasses.dataclass(frozen=True)
+class BloomFilter:
+    n_elements: int = 10000
+    fpr: float = 0.01
+    seed: int = 17
+
+    merge_mode = "max"
+
+    @property
+    def log2_bits(self) -> int:
+        m = -self.n_elements * math.log(self.fpr) / (math.log(2.0) ** 2)
+        return max(3, int(math.ceil(math.log2(max(8.0, m)))))
+
+    @property
+    def n_bits(self) -> int:
+        return 1 << self.log2_bits
+
+    @property
+    def k(self) -> int:
+        return max(1, int(round(self.n_bits / self.n_elements * math.log(2.0))))
+
+    def _seeds(self) -> jax.Array:
+        return jnp.asarray(hashing.row_seeds(self.seed, self.k))
+
+    def init(self, key: jax.Array | None = None) -> jax.Array:
+        del key
+        return jnp.zeros((self.n_bits,), dtype=jnp.int32)
+
+    def add_batch(self, state: jax.Array, items: jax.Array,
+                  values: jax.Array, mask: jax.Array) -> jax.Array:
+        del values
+        idx = hashing.bucket_hash(items, self._seeds(), self.log2_bits)  # [T,k]
+        upd = jnp.broadcast_to(mask.astype(jnp.int32)[:, None], idx.shape)
+        return state.at[idx].max(upd)
+
+    def stacked_add_batch(self, state, syn_idx, items, values, mask):
+        del values
+        idx = hashing.bucket_hash(items, self._seeds(), self.log2_bits)
+        upd = jnp.broadcast_to(mask.astype(jnp.int32)[:, None], idx.shape)
+        return state.at[syn_idx[:, None], idx].max(upd)
+
+    def estimate(self, state: jax.Array, items: jax.Array) -> jax.Array:
+        """Membership queries — True means 'possibly present'."""
+        idx = hashing.bucket_hash(items, self._seeds(), self.log2_bits)
+        return jnp.all(state[idx] > 0, axis=-1)
+
+    def merge(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        return jnp.maximum(a, b)
+
+    def memory_bytes(self) -> int:
+        return self.n_bits // 8

@@ -1,0 +1,152 @@
+"""CoreSetTree (StreamKM++ [Ackermann et al. 2012]) — clustering coresets.
+
+Merge-reduce tree over weighted point buckets: every ingested batch becomes
+a level-0 bucket (padded to ``bucket_size``); two buckets at the same level
+are reduced to one at the next level via kmeans++-style D^2 sampling. The
+coreset is the union of occupied buckets; ``weighted_kmeans`` runs Lloyd
+iterations over it (the paper's ExtractClusters stage).
+
+Deviation recorded in DESIGN.md: buckets are batch-aligned instead of
+exactly-m-point aligned (fixed shapes for jit); the merge-reduce semantics
+and O(log N) bucket count are unchanged. Randomness is counter-hashed so
+the tree is replayable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import hashing
+
+_LEVELS = 20        # supports 2^20 batches
+
+
+@dataclasses.dataclass(frozen=True)
+class CoreSetTree:
+    bucket_size: int = 64
+    dim: int = 2
+    seed: int = 47
+
+    merge_mode = "gather"
+
+    def init(self, key: jax.Array | None = None) -> Dict[str, jax.Array]:
+        del key
+        return dict(
+            points=jnp.zeros((_LEVELS, self.bucket_size, self.dim), jnp.float32),
+            weights=jnp.zeros((_LEVELS, self.bucket_size), jnp.float32),
+            occupied=jnp.zeros((_LEVELS,), bool),
+            ticket=jnp.zeros((), jnp.uint32),
+        )
+
+    # -- D^2-sampling reduce: 2m weighted points -> m ----------------------
+    def _reduce(self, pts: jax.Array, wts: jax.Array, ticket: jax.Array):
+        m = self.bucket_size
+
+        def pick(carry, i):
+            mind2, chosen_idx, chosen_mask = carry
+            probs = wts * mind2
+            probs = jnp.where(chosen_mask, 0.0, probs)
+            cum = jnp.cumsum(probs)
+            u = hashing.uniform01(ticket * jnp.uint32(7919)
+                                  + i.astype(jnp.uint32), self.seed)
+            target = u * jnp.maximum(cum[-1], 1e-30)
+            j = jnp.searchsorted(cum, target)
+            j = jnp.clip(j, 0, pts.shape[0] - 1)
+            d2 = jnp.sum((pts - pts[j]) ** 2, axis=-1)
+            return ((jnp.minimum(mind2, d2), chosen_idx.at[i].set(j),
+                     chosen_mask.at[j].set(True)), None)
+
+        init = (jnp.full((pts.shape[0],), jnp.inf, jnp.float32),
+                jnp.zeros((m,), jnp.int32),
+                jnp.zeros((pts.shape[0],), bool))
+        (mind2, idx, _), _ = jax.lax.scan(pick, init, jnp.arange(m))
+        centers = pts[idx]
+        # assign every point to nearest chosen center, sum weights
+        d2 = jnp.sum((pts[:, None, :] - centers[None, :, :]) ** 2, axis=-1)
+        assign = jnp.argmin(d2, axis=-1)
+        new_w = jax.ops.segment_sum(wts, assign, num_segments=m)
+        return centers, new_w
+
+    def _insert(self, state, pts, wts):
+        def cond(c):
+            lvl, _, _, st = c
+            return st["occupied"][lvl] & (lvl < _LEVELS - 1)
+
+        def body(c):
+            lvl, pts, wts, st = c
+            both_p = jnp.concatenate([pts, st["points"][lvl]])
+            both_w = jnp.concatenate([wts, st["weights"][lvl]])
+            ticket = st["ticket"] + 1
+            rp, rw = self._reduce(both_p, both_w, ticket)
+            st = dict(st, occupied=st["occupied"].at[lvl].set(False),
+                      ticket=ticket)
+            return (lvl + 1, rp, rw, st)
+
+        lvl, pts, wts, state = jax.lax.while_loop(
+            cond, body, (jnp.zeros((), jnp.int32), pts, wts, state))
+        return dict(
+            points=state["points"].at[lvl].set(pts),
+            weights=state["weights"].at[lvl].set(wts),
+            occupied=state["occupied"].at[lvl].set(True),
+            ticket=state["ticket"] + 1,
+        )
+
+    def add_batch(self, state, items, values, mask):
+        """`values` is a [T, dim] (or [T] when dim == 1) point batch,
+        T <= bucket_size."""
+        del items
+        v = values.astype(jnp.float32)
+        if v.ndim == 1:
+            v = v[:, None]
+        t = v.shape[0]
+        assert t <= self.bucket_size, "feed batches of <= bucket_size points"
+        pad = self.bucket_size - t
+        pts = jnp.pad(v, ((0, pad), (0, 0)))
+        wts = jnp.pad(mask.astype(jnp.float32), (0, pad))
+        return self._insert(state, pts, wts)
+
+    def estimate(self, state) -> Dict[str, jax.Array]:
+        """The coreset: stacked weighted points (weight 0 = inactive)."""
+        occ = state["occupied"][:, None]
+        w = jnp.where(occ, state["weights"], 0.0)
+        return dict(points=state["points"].reshape(-1, self.dim),
+                    weights=w.reshape(-1))
+
+    def merge(self, a, b):
+        """Insert b's occupied buckets into a (federated coreset union)."""
+        state = a
+        for lvl in range(_LEVELS):
+            pts = b["points"][lvl]
+            wts = jnp.where(b["occupied"][lvl], b["weights"][lvl], 0.0)
+            # inserting a zero-weight bucket is a harmless no-op on estimates
+            state = self._insert(state, pts, wts)
+        return state
+
+    def memory_bytes(self) -> int:
+        return _LEVELS * self.bucket_size * (self.dim + 1) * 4
+
+
+def weighted_kmeans(points: jax.Array, weights: jax.Array, k: int,
+                    iters: int = 10, seed: int = 0):
+    """Lloyd iterations over a weighted coreset (ExtractClusters)."""
+    n = points.shape[0]
+    u = hashing.uniform01(jnp.arange(n, dtype=jnp.uint32), seed)
+    order = jnp.argsort(-weights * (1.0 + 0.01 * u))    # weight-biased init
+    centers = points[order[:k]]
+
+    def step(centers, _):
+        d2 = jnp.sum((points[:, None, :] - centers[None, :, :]) ** 2, axis=-1)
+        assign = jnp.argmin(d2, axis=-1)
+        onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32) * weights[:, None]
+        tot = jnp.sum(onehot, axis=0)
+        new = (onehot.T @ points) / jnp.maximum(tot[:, None], 1e-9)
+        centers = jnp.where(tot[:, None] > 0, new, centers)
+        cost = jnp.sum(jnp.min(d2, axis=-1) * weights)
+        return centers, cost
+
+    centers, costs = jax.lax.scan(step, centers, None, length=iters)
+    return centers, costs[-1]

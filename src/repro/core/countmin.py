@@ -1,0 +1,87 @@
+"""CountMin sketch [Cormode & Muthukrishnan 2005] — count/frequency estimation.
+
+Parameters follow the paper's Table 1: (eps, delta) with w = ceil(e/eps)
+(rounded up to a power of two so multiply-shift bucket hashing applies) and
+d = ceil(ln(1/delta)). Estimate error <= eps * N with prob >= 1 - delta.
+
+Merge = elementwise addition (CM sketches are linear).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import hashing
+
+
+def _pow2_at_least(x: float) -> int:
+    return max(1, int(math.ceil(math.log2(max(2.0, x)))))
+
+
+@dataclasses.dataclass(frozen=True)
+class CountMin:
+    eps: float = 0.01
+    delta: float = 0.01
+    seed: int = 7
+    weighted: bool = True   # value-weighted counts (paper uses counts of bids)
+
+    merge_mode = "sum"      # linear sketch -> federated merge is one psum
+
+    @property
+    def depth(self) -> int:
+        return max(1, int(math.ceil(math.log(1.0 / self.delta))))
+
+    @property
+    def log2_width(self) -> int:
+        return _pow2_at_least(math.e / self.eps)
+
+    @property
+    def width(self) -> int:
+        return 1 << self.log2_width
+
+    def _seeds(self) -> jax.Array:
+        return jnp.asarray(hashing.row_seeds(self.seed, self.depth))
+
+    def init(self, key: jax.Array | None = None) -> jax.Array:
+        del key
+        return jnp.zeros((self.depth, self.width), dtype=jnp.float32)
+
+    def add_batch(self, state: jax.Array, items: jax.Array,
+                  values: jax.Array, mask: jax.Array) -> jax.Array:
+        idx = hashing.bucket_hash(items, self._seeds(), self.log2_width)  # [T,d]
+        v = (values if self.weighted else jnp.ones_like(values))
+        v = (v * mask.astype(jnp.float32))[:, None]                        # [T,1]
+        rows = jnp.arange(self.depth)[None, :]
+        return state.at[rows, idx].add(jnp.broadcast_to(v, idx.shape))
+
+    def stacked_add_batch(self, state: jax.Array, syn_idx: jax.Array,
+                          items: jax.Array, values: jax.Array,
+                          mask: jax.Array) -> jax.Array:
+        """Update a stack of synopses [n, d, w] routed by syn_idx [T] —
+        the vmap/slot-sharing path (thousands of CM sketches, one kernel)."""
+        idx = hashing.bucket_hash(items, self._seeds(), self.log2_width)
+        v = (values if self.weighted else jnp.ones_like(values))
+        v = (v * mask.astype(jnp.float32))[:, None]
+        rows = jnp.arange(self.depth)[None, :]
+        return state.at[syn_idx[:, None], rows, idx].add(
+            jnp.broadcast_to(v, idx.shape))
+
+    def estimate(self, state: jax.Array, items: jax.Array) -> jax.Array:
+        """Point frequency query for a batch of items."""
+        idx = hashing.bucket_hash(items, self._seeds(), self.log2_width)
+        rows = jnp.arange(self.depth)[None, :]
+        return jnp.min(state[rows, idx], axis=-1)
+
+    def merge(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        return a + b
+
+    # -- inner product (used by the planner for approximate joins) ---------
+    def inner_product(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        return jnp.min(jnp.sum(a * b, axis=-1))
+
+    def memory_bytes(self) -> int:
+        return self.depth * self.width * 4

@@ -1,0 +1,175 @@
+"""Sliding-window DFT synopsis (StatStream [Zhu & Shasha 2002]).
+
+The paper's vertical-scalability engine: each stream keeps the first
+``n_coeffs`` DFT coefficients of its length-``window`` sliding window,
+updated incrementally in O(n_coeffs) per tick:
+
+    X_F(t+1) = (X_F(t) - x_out + x_in) * e^{+2 pi i F / n}
+
+Normalized (unitary, z-scored) coefficients U_F = X_F / (sigma * n) satisfy
+(for F != 0, real series, conjugate symmetry):
+
+    corr(x, y) = 1 - d^2(U'_x, U'_y) / 2,     d^2 = 2 * sum_{F>=1} |U_xF - U_yF|^2
+
+and truncation to few coefficients only *under*-estimates d — so grid
+bucketing with cell size eps = sqrt(2 (1 - T)) prunes pairs with NO false
+dismissals (paper Section 7). |U_F| <= sqrt(2)/2, hence the sqrt(2)-diameter
+grid of the paper.
+
+Complex numbers are carried as a trailing [., 2] (re, im) axis: TPU-native
+(complex64 is poorly supported on MXU paths).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DFT:
+    window: int = 64
+    n_coeffs: int = 8           # coefficients F = 1 .. n_coeffs (F=0 is 0 when z-scored)
+    threshold: float = 0.9      # similarity threshold T -> grid cell eps
+    grid_coeffs: int = 2        # leading coefficients used for bucket coords
+    seed: int = 23
+
+    merge_mode = "fresh"        # DFT replicas are exchanged, not reduced
+
+    @property
+    def eps(self) -> float:
+        return math.sqrt(2.0 * max(1e-6, 1.0 - self.threshold))
+
+    @property
+    def grid_cells(self) -> int:
+        return int(math.ceil(math.sqrt(2.0) / self.eps))
+
+    # ------------------------------------------------------------------
+    def init(self, key: jax.Array | None = None) -> Dict[str, jax.Array]:
+        del key
+        f = self.n_coeffs
+        return dict(
+            ring=jnp.zeros((self.window,), jnp.float32),
+            pos=jnp.zeros((), jnp.int32),
+            count=jnp.zeros((), jnp.int32),
+            total=jnp.zeros((), jnp.float32),
+            totsq=jnp.zeros((), jnp.float32),
+            coeff=jnp.zeros((f, 2), jnp.float32),
+        )
+
+    def _twiddle(self) -> jax.Array:
+        """e^{+2 pi i F / n} for F = 1..n_coeffs as [F, 2] (re, im)."""
+        fs = np.arange(1, self.n_coeffs + 1, dtype=np.float64)
+        ang = 2.0 * np.pi * fs / self.window
+        return jnp.asarray(np.stack([np.cos(ang), np.sin(ang)], -1),
+                           dtype=jnp.float32)
+
+    def _step(self, state: Dict[str, jax.Array], x: jax.Array,
+              valid: jax.Array) -> Dict[str, jax.Array]:
+        tw = self._twiddle()
+        x_out = state["ring"][state["pos"]]
+        delta = x - x_out
+        re = state["coeff"][:, 0] + delta
+        im = state["coeff"][:, 1]
+        # complex multiply by twiddle
+        new_re = re * tw[:, 0] - im * tw[:, 1]
+        new_im = re * tw[:, 1] + im * tw[:, 0]
+        coeff = jnp.stack([new_re, new_im], -1)
+        new = dict(
+            ring=state["ring"].at[state["pos"]].set(x),
+            pos=(state["pos"] + 1) % self.window,
+            count=jnp.minimum(state["count"] + 1, np.int32(2**30)),
+            total=state["total"] + delta,
+            totsq=state["totsq"] + x * x - x_out * x_out,
+            coeff=coeff,
+        )
+        return jax.tree.map(lambda n, o: jnp.where(valid, n, o), new, state)
+
+    def add_batch(self, state: Dict[str, jax.Array], items: jax.Array,
+                  values: jax.Array, mask: jax.Array) -> Dict[str, jax.Array]:
+        """Feed a (time-ordered) run of ticks of this stream. `items` unused."""
+        del items
+
+        def body(s, xv):
+            x, valid = xv
+            return self._step(s, x, valid), None
+
+        state, _ = jax.lax.scan(body, state, (values.astype(jnp.float32), mask))
+        return state
+
+    def step(self, state, value, valid=True):
+        """One tick (vmap-friendly across thousands of streams)."""
+        return self._step(state, jnp.asarray(value, jnp.float32),
+                          jnp.asarray(valid))
+
+    # ------------------------------------------------------------------
+    def estimate(self, state: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+        """Return normalized coefficients + grid bucket (paper: 'coefficients
+        and the bucket identifier')."""
+        coeffs = self.normalized_coeffs(state)
+        coords, bucket = self.bucket_of(coeffs)
+        return dict(coeffs=coeffs, coords=coords, bucket=bucket)
+
+    def normalized_coeffs(self, state) -> jax.Array:
+        n = float(self.window)
+        mean = state["total"] / n
+        var = jnp.maximum(state["totsq"] / n - mean * mean, 1e-12)
+        sigma = jnp.sqrt(var)
+        return state["coeff"] / (sigma * n)
+
+    def bucket_of(self, coeffs: jax.Array):
+        """Grid coords over the first grid_coeffs (re, im) pairs, cell = eps."""
+        g = self.grid_coeffs
+        flat = coeffs[..., :g, :].reshape(*coeffs.shape[:-2], 2 * g)
+        half = math.sqrt(2.0) / 2.0
+        coords = jnp.floor((flat + half) / self.eps).astype(jnp.int32)
+        coords = jnp.clip(coords, 0, self.grid_cells - 1)
+        # pack coords into a single id (row-major over the small grid)
+        mult = jnp.asarray(
+            [self.grid_cells ** i for i in range(2 * g)], jnp.int32)
+        bucket = jnp.sum(coords * mult, axis=-1)
+        return coords, bucket
+
+    def merge(self, a, b):
+        """DFT synopses are exchanged between sites, not reduced; keep the
+        replica that has seen more ticks (documented deviation)."""
+        fresher = b["count"] > a["count"]
+        return jax.tree.map(lambda x, y: jnp.where(fresher, y, x), a, b)
+
+    def memory_bytes(self) -> int:
+        return (self.window + 4 + 2 * self.n_coeffs) * 4
+
+
+# ---------------------------------------------------------------------------
+# Batch helpers over many streams (used by service.planner + benchmarks)
+# ---------------------------------------------------------------------------
+
+def corr_from_coeffs(cx: jax.Array, cy: jax.Array) -> jax.Array:
+    """corr ~= 1 - d_trunc^2 / 2 with d^2 = 2 sum_F |cx - cy|^2."""
+    d2 = 2.0 * jnp.sum((cx - cy) ** 2, axis=(-2, -1))
+    return 1.0 - 0.5 * d2
+
+
+def pairwise_corr(coeffs: jax.Array) -> jax.Array:
+    """All-pairs correlation estimates from stacked coeffs [N, F, 2].
+
+    corr_ij = 1 - (|c_i|^2 + |c_j|^2 - 2 <c_i, c_j>)  (factor 2 folded in)
+    The <c_i, c_j> Gram matrix is one MXU matmul — this is the hot spot
+    kernels/corr_kernel.py tiles for VMEM.
+    """
+    n = coeffs.shape[0]
+    flat = coeffs.reshape(n, -1)
+    sq = jnp.sum(flat * flat, axis=-1)
+    gram = flat @ flat.T
+    return 1.0 - (sq[:, None] + sq[None, :] - 2.0 * gram)
+
+
+def adjacent_bucket_mask(coords: jax.Array) -> jax.Array:
+    """[N, N] mask: True where streams fall in the same or adjacent grid
+    cells (the only candidate pairs; everything else is pruned)."""
+    diff = jnp.abs(coords[:, None, :] - coords[None, :, :])
+    return jnp.all(diff <= 1, axis=-1)

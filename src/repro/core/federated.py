@@ -1,0 +1,73 @@
+"""Federated scalability: synopsis mergeability -> jax.lax collectives.
+
+The paper's yellow/purple paths (geo-dispersed sites exchanging synopses,
+a responsible site synthesizing the global estimate) map onto mesh-axis
+collectives:
+
+  merge_mode == "sum"   (CountMin, AMS, RHP)       -> lax.psum
+  merge_mode == "max"   (HLL, Bloom, FM bitmaps)   -> lax.pmax
+  merge_mode == "gather"(samples, quantiles, ...)  -> all_gather + tree merge
+  merge_mode == "fresh" (DFT replicas)             -> exchanged, not reduced
+
+On a TPU fleet the `pod` axis plays the role of the WAN between clusters
+(DCN links) and the `data` axis the intra-cluster workers; communication
+cost of a federated estimate is exactly the collective's operand bytes —
+which is what benchmarks/fig5 reports against the ship-the-raw-stream
+baseline.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .synopsis import Synopsis
+
+
+def merge_over_axis(kind: Synopsis, state: Any, axis_name: str) -> Any:
+    """Global merge of per-shard synopsis states along a mesh axis.
+
+    Must be called inside shard_map/pmap context where `axis_name` exists.
+    """
+    mode = getattr(kind, "merge_mode", "gather")
+    if mode == "sum":
+        return jax.tree.map(lambda x: lax.psum(x, axis_name), state)
+    if mode == "max":
+        return jax.tree.map(lambda x: lax.pmax(x, axis_name), state)
+    if mode == "fresh":
+        # keep the replica with the max count: gather then reduce via merge
+        pass
+    # generic: all-gather shards then fold with the kind's merge
+    gathered = jax.tree.map(
+        functools.partial(lax.all_gather, axis_name=axis_name), state)
+    n = lax.psum(1, axis_name)
+
+    def fold(acc, i):
+        shard = jax.tree.map(lambda x: x[i], gathered)
+        return kind.merge(acc, shard), None
+
+    first = jax.tree.map(lambda x: x[0], gathered)
+    if isinstance(n, int):  # static axis size
+        acc = first
+        for i in range(1, n):
+            acc = kind.merge(acc, jax.tree.map(lambda x: x[i], gathered))
+        return acc
+    acc, _ = jax.lax.scan(fold, first, jnp.arange(1, n))
+    return acc
+
+
+def merge_tree(kind: Synopsis, states: list[Any]) -> Any:
+    """Host-side N-way merge (responsible-site synthesis, Case 3)."""
+    acc = states[0]
+    for s in states[1:]:
+        acc = kind.merge(acc, s)
+    return acc
+
+
+def communication_bytes(kind: Synopsis, state: Any) -> int:
+    """Bytes a site ships to the responsible site for one federated
+    estimate = the synopsis state size (paper: 'only small bitmaps')."""
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(state))

@@ -1,0 +1,83 @@
+"""HyperLogLog [Flajolet et al. 2007] — distinct count estimation.
+
+Parameter follows the paper's Table 1: relative standard error
+rse ~= 1.04 / sqrt(2**p)  =>  p = ceil(log2((1.04 / rse)**2)).
+
+State: 2**p registers, each the max leading-zero rank seen.
+Merge = elementwise max (the paper's federated HLL merge).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import hashing
+
+
+def _alpha(m: int) -> float:
+    if m == 16:
+        return 0.673
+    if m == 32:
+        return 0.697
+    if m == 64:
+        return 0.709
+    return 0.7213 / (1.0 + 1.079 / m)
+
+
+@dataclasses.dataclass(frozen=True)
+class HyperLogLog:
+    rse: float = 0.0325          # default ~ p=10
+    seed: int = 11
+
+    merge_mode = "max"           # federated merge is one pmax
+
+    @property
+    def p(self) -> int:
+        return max(4, min(18, int(math.ceil(math.log2((1.04 / self.rse) ** 2)))))
+
+    @property
+    def m(self) -> int:
+        return 1 << self.p
+
+    def init(self, key: jax.Array | None = None) -> jax.Array:
+        del key
+        return jnp.zeros((self.m,), dtype=jnp.int32)
+
+    def _bucket_rank(self, items: jax.Array):
+        h = hashing.hash_u32(items, self.seed)
+        bucket = (h >> np.uint32(32 - self.p)).astype(jnp.int32)
+        rest = (h << np.uint32(self.p)).astype(jnp.uint32)
+        rank = jnp.where(rest == 0, 32 - self.p + 1,
+                         hashing.clz32(rest) + 1).astype(jnp.int32)
+        return bucket, rank
+
+    def add_batch(self, state: jax.Array, items: jax.Array,
+                  values: jax.Array, mask: jax.Array) -> jax.Array:
+        del values
+        bucket, rank = self._bucket_rank(items)
+        rank = jnp.where(mask, rank, 0)
+        return state.at[bucket].max(rank)
+
+    def stacked_add_batch(self, state, syn_idx, items, values, mask):
+        del values
+        bucket, rank = self._bucket_rank(items)
+        rank = jnp.where(mask, rank, 0)
+        return state.at[syn_idx, bucket].max(rank)
+
+    def estimate(self, state: jax.Array) -> jax.Array:
+        m = float(self.m)
+        raw = _alpha(self.m) * m * m / jnp.sum(jnp.exp2(-state.astype(jnp.float32)))
+        zeros = jnp.sum(state == 0).astype(jnp.float32)
+        # linear counting small-range correction
+        lc = m * jnp.log(m / jnp.maximum(zeros, 1.0))
+        return jnp.where((raw <= 2.5 * m) & (zeros > 0), lc, raw)
+
+    def merge(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        return jnp.maximum(a, b)
+
+    def memory_bytes(self) -> int:
+        return self.m * 4

@@ -1,0 +1,110 @@
+"""Lossy Counting [Manku & Motwani 2002] — frequent items / counts.
+
+Implemented as the Misra-Gries / Space-Saving fixed-table variant with
+k = ceil(1/eps) slots: identical eps*N error guarantee, fixed shapes
+(TPU-friendly), and — unlike textbook Lossy Counting — MERGEABLE in the
+sense of Agarwal et al. [11] (the paper's own mergeability reference).
+
+Deviation recorded in DESIGN.md: bucket-boundary deletions are replaced by
+min-count eviction; guarantees are equivalent (err <= N/k <= eps*N).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_EMPTY = np.uint32(0xFFFFFFFF)
+
+
+@dataclasses.dataclass(frozen=True)
+class LossyCounting:
+    eps: float = 0.01
+    seed: int = 31
+
+    merge_mode = "gather"
+
+    @property
+    def k(self) -> int:
+        return max(4, int(math.ceil(1.0 / self.eps)))
+
+    def init(self, key: jax.Array | None = None) -> Dict[str, jax.Array]:
+        del key
+        return dict(
+            keys=jnp.full((self.k,), _EMPTY, jnp.uint32),
+            counts=jnp.zeros((self.k,), jnp.float32),
+            error=jnp.zeros((self.k,), jnp.float32),
+        )
+
+    def _step(self, s, item, v, valid):
+        keys, counts, error = s["keys"], s["counts"], s["error"]
+        hit = keys == item
+        any_hit = jnp.any(hit)
+        empty = keys == _EMPTY
+        any_empty = jnp.any(empty)
+        # slot selection: matching slot; else first empty; else min-count
+        hit_slot = jnp.argmax(hit)
+        empty_slot = jnp.argmax(empty)
+        min_slot = jnp.argmin(counts)
+        slot = jnp.where(any_hit, hit_slot,
+                         jnp.where(any_empty, empty_slot, min_slot))
+        evict = (~any_hit) & (~any_empty)
+        new_err = jnp.where(evict, counts[slot], error[slot])
+        base = jnp.where(any_hit, counts[slot],
+                         jnp.where(any_empty, 0.0, counts[slot]))
+        new_keys = keys.at[slot].set(jnp.where(valid, item, keys[slot]))
+        new_counts = counts.at[slot].set(
+            jnp.where(valid, base + v, counts[slot]))
+        new_error = error.at[slot].set(jnp.where(valid, new_err, error[slot]))
+        return dict(keys=new_keys, counts=new_counts, error=new_error)
+
+    def add_batch(self, state, items, values, mask):
+        def body(s, t):
+            item, v, valid = t
+            return self._step(s, item, v, valid), None
+
+        state, _ = jax.lax.scan(
+            body, state,
+            (items.astype(jnp.uint32), values.astype(jnp.float32), mask))
+        return state
+
+    def estimate(self, state, items: jax.Array) -> jax.Array:
+        """Frequency estimates (0 when not tracked); over-count <= eps*N."""
+        eq = state["keys"][None, :] == items.astype(jnp.uint32)[:, None]
+        return jnp.sum(jnp.where(eq, state["counts"][None, :], 0.0), axis=-1)
+
+    def frequent_items(self, state, min_count: float):
+        keep = (state["counts"] - state["error"]) >= min_count
+        return state["keys"], state["counts"], keep
+
+    def merge(self, a, b):
+        """Mergeable-summaries merge: coalesce matching keys, keep top-k,
+        subtract the (k+1)-th largest residual count (Agarwal et al.)."""
+        keys = jnp.concatenate([a["keys"], b["keys"]])
+        counts = jnp.concatenate([a["counts"], b["counts"]])
+        error = jnp.concatenate([a["error"], b["error"]])
+        # coalesce duplicates (O(k^2) compare — k is small by construction)
+        eq = (keys[:, None] == keys[None, :]) & (keys[:, None] != _EMPTY)
+        first = jnp.argmax(eq, axis=1)              # representative slot
+        is_rep = first == jnp.arange(keys.shape[0])
+        summed = jnp.sum(jnp.where(eq, counts[None, :], 0.0), axis=1)
+        err = jnp.max(jnp.where(eq, error[None, :], 0.0), axis=1)
+        counts = jnp.where(is_rep & (keys != _EMPTY), summed, 0.0)
+        error = jnp.where(is_rep & (keys != _EMPTY), err, 0.0)
+        keys = jnp.where(is_rep & (counts > 0), keys, _EMPTY)
+        order = jnp.argsort(-counts)
+        kth = counts[order[self.k]] if counts.shape[0] > self.k else 0.0
+        topk = order[: self.k]
+        new_counts = jnp.maximum(counts[topk] - kth, 0.0)
+        return dict(
+            keys=jnp.where(new_counts > 0, keys[topk], _EMPTY),
+            counts=new_counts,
+            error=jnp.where(new_counts > 0, error[topk] + kth, 0.0),
+        )
+
+    def memory_bytes(self) -> int:
+        return self.k * 12

@@ -1,0 +1,73 @@
+"""Random Hyperplane Projection (RHP / SimHash) [Charikar 2002; Giatrakos
+et al. 2013] — cosine-similarity LSH bitmaps.
+
+State: b running dot products of the stream's frequency/feature vector v
+with b ±1 hyperplanes (linear in v => incremental and MERGEABLE by
+addition). The bitmap is sign(dots); Hamming distance between bitmaps
+estimates the angle:  cos_sim ~= cos(pi * ham / b).  The paper uses the
+Hamming weight of such bitmaps for correlation-aware hashing of streams to
+workers — ``bucket_of`` packs the first g bits into a bucket id.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import hashing
+
+
+@dataclasses.dataclass(frozen=True)
+class RHP:
+    n_bits: int = 64           # bitmap size
+    threshold: float = 0.9     # similarity threshold (for candidate pruning)
+    bucket_bits: int = 8       # leading bits forming the bucket id
+    seed: int = 29
+
+    merge_mode = "sum"
+
+    def _seeds(self) -> jax.Array:
+        return jnp.asarray(hashing.row_seeds(self.seed, self.n_bits))
+
+    def init(self, key: jax.Array | None = None) -> jax.Array:
+        del key
+        return jnp.zeros((self.n_bits,), jnp.float32)
+
+    def add_batch(self, state: jax.Array, items: jax.Array,
+                  values: jax.Array, mask: jax.Array) -> jax.Array:
+        sgn = hashing.sign_hash(items, self._seeds())          # [T, b]
+        v = (values * mask.astype(jnp.float32))[:, None]
+        return state + jnp.sum(sgn * v, axis=0)
+
+    def stacked_add_batch(self, state, syn_idx, items, values, mask):
+        sgn = hashing.sign_hash(items, self._seeds())
+        v = (values * mask.astype(jnp.float32))[:, None]
+        return state.at[syn_idx].add(sgn * v)
+
+    def signature(self, state: jax.Array) -> jax.Array:
+        return (state > 0).astype(jnp.int32)
+
+    def estimate(self, state: jax.Array) -> dict:
+        sig = self.signature(state)
+        return dict(signature=sig, hamming_weight=jnp.sum(sig),
+                    bucket=self.bucket_of(sig))
+
+    def bucket_of(self, sig: jax.Array) -> jax.Array:
+        g = self.bucket_bits
+        mult = jnp.asarray([1 << i for i in range(g)], jnp.int32)
+        return jnp.sum(sig[..., :g] * mult, axis=-1)
+
+    def merge(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        return a + b     # dot products are linear in the stream
+
+    def memory_bytes(self) -> int:
+        return self.n_bits * 4
+
+
+def cosine_similarity(sig_a: jax.Array, sig_b: jax.Array,
+                      n_bits: int) -> jax.Array:
+    ham = jnp.sum(jnp.abs(sig_a - sig_b), axis=-1).astype(jnp.float32)
+    return jnp.cos(jnp.pi * ham / n_bits)

@@ -1,0 +1,86 @@
+"""Chain / reservoir sampler [Babcock, Datar, Motwani 2002] — uniform sample.
+
+Whole-stream mode is Vitter's reservoir-R; sliding-window mode is obtained
+by composing this kind with core.window.PaneWindow (sample-per-pane +
+weighted subsample on merge), which is the mergeable-summaries formulation
+of windowed sampling — recorded deviation from the chain-sample pointer
+structure, same uniformity guarantee per pane.
+
+Randomness is counter-based (hash of n_seen), so the sampler is a pure
+function of the stream — replayable across checkpoint restore.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import hashing
+
+
+@dataclasses.dataclass(frozen=True)
+class ReservoirSampler:
+    sample_size: int = 64
+    seed: int = 41
+
+    merge_mode = "gather"
+
+    def init(self, key: jax.Array | None = None) -> Dict[str, jax.Array]:
+        del key
+        return dict(
+            values=jnp.zeros((self.sample_size,), jnp.float32),
+            items=jnp.zeros((self.sample_size,), jnp.uint32),
+            n_seen=jnp.zeros((), jnp.int32),
+        )
+
+    def _step(self, s, item, v, valid):
+        n = s["n_seen"]
+        u = hashing.uniform01(n.astype(jnp.uint32) * jnp.uint32(2654435761)
+                              ^ item, self.seed)
+        j = (u * (n + 1).astype(jnp.float32)).astype(jnp.int32)
+        fill = n < self.sample_size
+        slot = jnp.where(fill, n, j)
+        do = valid & (fill | (j < self.sample_size))
+        return dict(
+            values=s["values"].at[slot].set(
+                jnp.where(do, v, s["values"][slot])),
+            items=s["items"].at[slot].set(
+                jnp.where(do, item, s["items"][slot])),
+            n_seen=n + valid.astype(jnp.int32),
+        )
+
+    def add_batch(self, state, items, values, mask):
+        def body(s, t):
+            return self._step(s, t[0], t[1], t[2]), None
+
+        state, _ = jax.lax.scan(
+            body, state,
+            (items.astype(jnp.uint32), values.astype(jnp.float32), mask))
+        return state
+
+    def estimate(self, state) -> Dict[str, jax.Array]:
+        k = jnp.minimum(state["n_seen"], self.sample_size)
+        valid = jnp.arange(self.sample_size) < k
+        return dict(values=state["values"], items=state["items"], valid=valid)
+
+    def merge(self, a, b):
+        """Weighted reservoir merge: slot i keeps a's item with probability
+        n_a / (n_a + n_b) — unbiased union sample."""
+        na = a["n_seen"].astype(jnp.float32)
+        nb = b["n_seen"].astype(jnp.float32)
+        p = na / jnp.maximum(na + nb, 1.0)
+        u = hashing.uniform01(
+            jnp.arange(self.sample_size, dtype=jnp.uint32)
+            ^ (a["n_seen"] + b["n_seen"]).astype(jnp.uint32), self.seed + 2)
+        take_a = u < p
+        return dict(
+            values=jnp.where(take_a, a["values"], b["values"]),
+            items=jnp.where(take_a, a["items"], b["items"]),
+            n_seen=a["n_seen"] + b["n_seen"],
+        )
+
+    def memory_bytes(self) -> int:
+        return self.sample_size * 8

@@ -1,0 +1,114 @@
+"""Sticky Sampling [Manku & Motwani 2002] — probabilistic frequent items.
+
+Parameters (support s, eps, delta) per the paper's Table 1. Capacity
+t = ceil(ln(1/(s*delta)) / eps) entries; new keys are admitted with
+probability 1/r where the sampling rate r doubles per epoch; at each epoch
+change tracked counts are geometrically decremented.
+
+JAX adaptation: admission coins come from a counter-based hash (stateless
+PRNG), epoch decrements use one geometric draw per slot; fixed-capacity
+table like lossy.py. All deviations are statistical-equivalent and tested
+on zipf streams (support recall / false-positive behaviour).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import hashing
+
+_EMPTY = np.uint32(0xFFFFFFFF)
+
+
+@dataclasses.dataclass(frozen=True)
+class StickySampling:
+    support: float = 0.01
+    eps: float = 0.002
+    delta: float = 0.01
+    seed: int = 37
+
+    merge_mode = "gather"
+
+    @property
+    def capacity(self) -> int:
+        t = math.log(1.0 / (self.support * self.delta)) / self.eps
+        return int(min(max(8, math.ceil(t / 16.0)), 4096))
+
+    def init(self, key: jax.Array | None = None) -> Dict[str, jax.Array]:
+        del key
+        return dict(
+            keys=jnp.full((self.capacity,), _EMPTY, jnp.uint32),
+            counts=jnp.zeros((self.capacity,), jnp.float32),
+            n_seen=jnp.zeros((), jnp.int32),
+            epoch=jnp.zeros((), jnp.int32),
+        )
+
+    def _rate(self, epoch):
+        return jnp.exp2(epoch.astype(jnp.float32))      # r = 2^epoch
+
+    def _step(self, s, item, valid):
+        keys, counts = s["keys"], s["counts"]
+        n = s["n_seen"] + 1
+        # epoch boundaries at 2t, 4t, 8t ... (t = capacity * 16 heuristic)
+        t = self.capacity * 16
+        want_epoch = jnp.maximum(
+            0, jnp.floor(jnp.log2(jnp.maximum(n.astype(jnp.float32) / t, 1.0)))
+        ).astype(jnp.int32)
+        bump = want_epoch > s["epoch"]
+        # geometric decrement on epoch change (one draw per slot)
+        u = hashing.uniform01(
+            jnp.arange(self.capacity, dtype=jnp.uint32) ^ n.astype(jnp.uint32),
+            self.seed)
+        geo = jnp.floor(jnp.log(jnp.maximum(u, 1e-9)) / math.log(0.5))
+        counts = jnp.where(bump, jnp.maximum(counts - geo, 0.0), counts)
+        keys = jnp.where(bump & (counts <= 0), _EMPTY, keys)
+
+        hit = keys == item
+        any_hit = jnp.any(hit)
+        empty = keys == _EMPTY
+        any_empty = jnp.any(empty)
+        coin = hashing.uniform01(item ^ n.astype(jnp.uint32), self.seed + 1)
+        admit = coin < 1.0 / self._rate(jnp.maximum(want_epoch, s["epoch"]))
+        slot = jnp.where(any_hit, jnp.argmax(hit), jnp.argmax(empty))
+        do = valid & (any_hit | (any_empty & admit))
+        keys = keys.at[slot].set(jnp.where(do, item, keys[slot]))
+        counts = counts.at[slot].set(
+            jnp.where(do, counts[slot] + 1.0, counts[slot]))
+        return dict(keys=keys, counts=counts,
+                    n_seen=jnp.where(valid, n, s["n_seen"]),
+                    epoch=jnp.maximum(want_epoch, s["epoch"]))
+
+    def add_batch(self, state, items, values, mask):
+        del values
+
+        def body(s, t):
+            return self._step(s, t[0], t[1]), None
+
+        state, _ = jax.lax.scan(body, state, (items.astype(jnp.uint32), mask))
+        return state
+
+    def estimate(self, state, items: jax.Array) -> jax.Array:
+        eq = state["keys"][None, :] == items.astype(jnp.uint32)[:, None]
+        return jnp.sum(jnp.where(eq, state["counts"][None, :], 0.0), axis=-1)
+
+    def frequent_items(self, state):
+        thr = (self.support - self.eps) * state["n_seen"].astype(jnp.float32)
+        keep = state["counts"] >= jnp.maximum(thr, 1.0)
+        return state["keys"], state["counts"], keep
+
+    def merge(self, a, b):
+        """Approximate merge: union of tables, keep highest counts."""
+        keys = jnp.concatenate([a["keys"], b["keys"]])
+        counts = jnp.concatenate([a["counts"], b["counts"]])
+        order = jnp.argsort(-counts)[: self.capacity]
+        return dict(keys=keys[order], counts=counts[order],
+                    n_seen=a["n_seen"] + b["n_seen"],
+                    epoch=jnp.maximum(a["epoch"], b["epoch"]))
+
+    def memory_bytes(self) -> int:
+        return self.capacity * 8

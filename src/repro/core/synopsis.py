@@ -1,0 +1,79 @@
+"""Synopsis protocol + runtime registry (the paper's `Synopsis` base class).
+
+A synopsis *kind* is a frozen dataclass holding static parameters (Table 1
+of the paper) and exposing the paper's three methods as pure functions:
+
+    init(key)                       -> state pytree
+    add_batch(state, items, values, mask) -> state
+    estimate(state, ...)            -> estimation pytree
+    merge(a, b)                     -> state            (mergeability, [11])
+
+``state`` is a pytree of fixed-shape jnp arrays, which makes every kind
+vmappable (thousands of synopses of one kind share one compiled update --
+the TPU analogue of Flink slot sharing) and shardable via shard_map.
+
+The registry provides the paper's *Load Synopsis* pluggability: new kinds
+can be registered while the engine is running; each kind gets its own jit
+cache so loading one never recompiles the others.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Protocol, runtime_checkable
+
+import jax
+
+
+@runtime_checkable
+class Synopsis(Protocol):
+    """Structural protocol every synopsis kind satisfies."""
+
+    def init(self, key: jax.Array) -> Any: ...
+
+    def add_batch(self, state: Any, items: jax.Array, values: jax.Array,
+                  mask: jax.Array) -> Any: ...
+
+    def estimate(self, state: Any, *args: Any) -> Any: ...
+
+    def merge(self, a: Any, b: Any) -> Any: ...
+
+
+# ---------------------------------------------------------------------------
+# Runtime registry (Load Synopsis / pluggability)
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[..., Synopsis]] = {}
+
+
+def register_kind(name: str, factory: Callable[..., Synopsis],
+                  *, overwrite: bool = False) -> None:
+    """Register a synopsis kind at runtime (paper: Load Synopsis request)."""
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"synopsis kind {name!r} already registered")
+    _REGISTRY[name] = factory
+
+
+def make_kind(name: str, **params: Any) -> Synopsis:
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown synopsis kind {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**params)
+
+
+def known_kinds() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def kind_params(kind: Synopsis) -> Dict[str, Any]:
+    """Static parameters of a kind (for SDE Status reports)."""
+    if dataclasses.is_dataclass(kind):
+        return {f.name: getattr(kind, f.name) for f in dataclasses.fields(kind)}
+    return {}
+
+
+def name_of_kind(kind: Synopsis) -> str:
+    """Registry name of a kind instance (for snapshot manifests)."""
+    for name, factory in _REGISTRY.items():
+        if factory is type(kind):
+            return name
+    raise KeyError(f"kind {type(kind).__name__} not in registry")

@@ -1,0 +1,90 @@
+"""Pane-based sliding windows, generic over any mergeable synopsis.
+
+Paper Section 6 ("Windows & Out-of-order Arrival Handling"): an SDEaaS
+cannot use the platform's native windowing because every synopsis defines
+its own window — so windows must be implemented inside the engine. We use
+the classic panes decomposition: the window is n_panes sub-synopses; the
+estimate merges live panes; expiry re-initializes the oldest pane. This
+works for EVERY mergeable kind and gives O(state * n_panes) memory with
+O(1) expiry (no per-tuple deamortization).
+
+Out-of-order tolerance: tuples may land in the still-open previous pane
+(bounded lateness = one pane span), mirroring allowedLateness().
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .synopsis import Synopsis
+
+
+@dataclasses.dataclass(frozen=True)
+class PaneWindow:
+    """Wraps `kind` into a count-based sliding window synopsis."""
+    kind: Any
+    n_panes: int = 4
+    pane_span: int = 1024        # tuples per pane
+
+    @property
+    def merge_mode(self):
+        return "gather"
+
+    def init(self, key: jax.Array | None = None) -> Dict[str, Any]:
+        proto = self.kind.init(key)
+        panes = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (self.n_panes,) + x.shape).copy(),
+            proto)
+        return dict(panes=panes, head=jnp.zeros((), jnp.int32),
+                    in_pane=jnp.zeros((), jnp.int32))
+
+    def add_batch(self, state, items, values, mask):
+        n_new = jnp.sum(mask.astype(jnp.int32))
+        rotate = (state["in_pane"] + n_new) >= self.pane_span
+        head = jnp.where(rotate, (state["head"] + 1) % self.n_panes,
+                         state["head"])
+        proto = self.kind.init(None)
+        # on rotation, clear the new head pane (expiry of the oldest pane)
+        panes = jax.tree.map(
+            lambda p, z: jnp.where(
+                rotate,
+                p.at[head].set(jnp.broadcast_to(z, p.shape[1:])), p),
+            state["panes"], proto)
+        cur = jax.tree.map(lambda p: p[head], panes)
+        cur = self.kind.add_batch(cur, items, values, mask)
+        panes = jax.tree.map(lambda p, c: p.at[head].set(c), panes, cur)
+        in_pane = jnp.where(rotate, n_new, state["in_pane"] + n_new)
+        return dict(panes=panes, head=head, in_pane=in_pane)
+
+    def merged(self, state):
+        acc = jax.tree.map(lambda p: p[0], state["panes"])
+        for i in range(1, self.n_panes):
+            acc = self.kind.merge(acc,
+                                  jax.tree.map(lambda p: p[i], state["panes"]))
+        return acc
+
+    def estimate(self, state, *args):
+        return self.kind.estimate(self.merged(state), *args)
+
+    def merge(self, a, b):
+        """Cross-shard merge: pane-wise merge (panes advance in lockstep
+        when shards consume the same logical stream epochs)."""
+        panes = jax.tree.map(
+            lambda pa, pb: jax.vmap(lambda x, y: x)(pa, pb), a["panes"],
+            b["panes"])
+        # pane-wise kind merge
+        merged = a["panes"]
+        for i in range(self.n_panes):
+            m = self.kind.merge(
+                jax.tree.map(lambda p: p[i], a["panes"]),
+                jax.tree.map(lambda p: p[i], b["panes"]))
+            merged = jax.tree.map(lambda p, v: p.at[i].set(v), merged, m)
+        del panes
+        return dict(panes=merged, head=jnp.maximum(a["head"], b["head"]),
+                    in_pane=jnp.maximum(a["in_pane"], b["in_pane"]))
+
+    def memory_bytes(self) -> int:
+        return self.n_panes * self.kind.memory_bytes()

@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the SDE's compute hot spots:
+#   onehot_matmul   — CountMin/AMS scatter-add as MXU one-hot matmuls
+#   hll_max         — HLL register max-scatter (tiled VPU max sweep)
+#   sliding_dft     — batched StatStream sliding-DFT tick
+#   pairwise_corr   — blocked Gram/correlation (AggregativeOperation)
+#   flash_attention — streaming-softmax attention (prefill memory fix)
+# ops.py = jit'd wrappers (interpret=True off-TPU); ref.py = jnp oracles.
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,68 @@
+"""HyperLogLog register max-scatter kernel.
+
+Max has no matmul form, so this kernel tiles the (synopsis x register)
+plane into VMEM blocks and sweeps the update batch in the innermost grid
+dimension, keeping a running elementwise max per block:
+
+    regs[syn, m] = max(regs[syn, m], max_t rank_t * [syn_t==syn][bkt_t==m])
+
+The [T_t, S_t, M_t] one-hot cube is materialized per step — tiles are
+sized so it stays ~0.5 MB (VPU-bound kernel; roofline: memory term).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(regs_ref, syn_ref, bkt_ref, rank_ref, out_ref, *, s_tile, m_tile):
+    t = pl.program_id(2)
+    s_base = pl.program_id(0) * s_tile
+    m_base = pl.program_id(1) * m_tile
+
+    syn = syn_ref[...]
+    bkt = bkt_ref[...]
+    rank = rank_ref[...]
+
+    s_ids = s_base + jax.lax.broadcasted_iota(jnp.int32, (1, s_tile), 1)
+    m_ids = m_base + jax.lax.broadcasted_iota(jnp.int32, (1, m_tile), 1)
+    cmp_s = (syn[:, None] == s_ids)                       # [T_t, S_t]
+    cmp_m = (bkt[:, None] == m_ids)                       # [T_t, M_t]
+    cube = jnp.where(cmp_s[:, :, None] & cmp_m[:, None, :],
+                     rank[:, None, None], 0)              # [T_t, S_t, M_t]
+    tile = jnp.max(cube, axis=0)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.maximum(regs_ref[...], tile)
+
+    @pl.when(t > 0)
+    def _acc():
+        out_ref[...] = jnp.maximum(out_ref[...], tile)
+
+
+@functools.partial(jax.jit, static_argnames=("s_tile", "m_tile", "t_tile",
+                                             "interpret"))
+def hll_max_update(regs: jax.Array, syn_idx: jax.Array, bucket: jax.Array,
+                   rank: jax.Array, *, s_tile: int = 8, m_tile: int = 128,
+                   t_tile: int = 128, interpret: bool = True) -> jax.Array:
+    """regs [n, m] int32; syn_idx/bucket/rank [T] int32 (rank 0 = masked)."""
+    n, m = regs.shape
+    t_total = syn_idx.shape[0]
+    grid = (n // s_tile, m // m_tile, t_total // t_tile)
+    return pl.pallas_call(
+        functools.partial(_kernel, s_tile=s_tile, m_tile=m_tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((s_tile, m_tile), lambda s, m_, t: (s, m_)),
+            pl.BlockSpec((t_tile,), lambda s, m_, t: (t,)),
+            pl.BlockSpec((t_tile,), lambda s, m_, t: (t,)),
+            pl.BlockSpec((t_tile,), lambda s, m_, t: (t,)),
+        ],
+        out_specs=pl.BlockSpec((s_tile, m_tile), lambda s, m_, t: (s, m_)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.int32),
+        interpret=interpret,
+    )(regs, syn_idx, bucket, rank)

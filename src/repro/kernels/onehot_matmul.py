@@ -1,0 +1,87 @@
+"""Sketch scatter-add as a dense one-hot matmul on the MXU.
+
+THE central TPU adaptation of the paper's hot loop. CPU/Flink (and GPU)
+update a CountMin/AMS sketch with scatter-adds; TPUs hate scatter but love
+dense matmuls. A block of T updates routed to a stack of sketches becomes
+
+    counts[syn, j, w] += sum_t (syn_t == syn) * v_t * s_tj * (idx_tj == w)
+                       =        A^T @ B
+    A[t, syn] = (syn_t == syn) * v_t * sign_tj      (one-hot rows, weighted)
+    B[t, w]   = (idx_tj == w)                       (one-hot buckets)
+
+i.e. an [S_tile x T_tile] x [T_tile x W_tile] matmul per grid cell — 100%
+MXU work, zero scatter. The same kernel serves CountMin (sign == 1) and
+AMS/count-sketch (sign == ±1), and the stacked thousands-of-synopses path
+(paper's slot sharing) for free via the `syn` one-hot.
+
+Grid: (d, S_tiles, W_tiles, T_tiles); T is innermost so each output tile
+is revisited consecutively and accumulated in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(syn_ref, idx_ref, val_ref, sgn_ref, out_ref, *, s_tile, w_tile):
+    t = pl.program_id(3)
+    s_base = pl.program_id(1) * s_tile
+    w_base = pl.program_id(2) * w_tile
+
+    syn = syn_ref[...]                      # [T_t]
+    idx = idx_ref[..., 0]                   # [T_t]   (this j's buckets)
+    val = val_ref[...] * sgn_ref[..., 0]    # [T_t]   (sign folded in)
+
+    s_ids = s_base + jax.lax.broadcasted_iota(jnp.int32, (1, s_tile), 1)
+    w_ids = w_base + jax.lax.broadcasted_iota(jnp.int32, (1, w_tile), 1)
+
+    a = jnp.where(syn[:, None] == s_ids, val[:, None], 0.0)      # [T_t, S_t]
+    b = (idx[:, None] == w_ids).astype(jnp.float32)              # [T_t, W_t]
+    tile = jax.lax.dot_general(
+        a, b, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                      # [S_t, W_t]
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = tile[:, None, :]
+
+    @pl.when(t > 0)
+    def _acc():
+        out_ref[...] += tile[:, None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("s_tile", "w_tile", "t_tile",
+                                             "interpret"))
+def onehot_scatter_add(counts: jax.Array, syn_idx: jax.Array,
+                       idx: jax.Array, values: jax.Array,
+                       signs: jax.Array, *, s_tile: int = 128,
+                       w_tile: int = 256, t_tile: int = 512,
+                       interpret: bool = True) -> jax.Array:
+    """counts [n, d, w] += one-hot scatter of T updates. All dims must be
+    multiples of their tiles (ops.py pads).
+
+    syn_idx [T] i32, idx [T, d] i32, values [T] f32, signs [T, d] f32.
+    Returns the *delta* accumulated into a fresh buffer plus `counts`.
+    """
+    n, d, w = counts.shape
+    t_total = syn_idx.shape[0]
+    grid = (d, n // s_tile, w // w_tile, t_total // t_tile)
+
+    delta = pl.pallas_call(
+        functools.partial(_kernel, s_tile=s_tile, w_tile=w_tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t_tile,), lambda j, s, w_, t: (t,)),
+            pl.BlockSpec((t_tile, 1), lambda j, s, w_, t: (t, j)),
+            pl.BlockSpec((t_tile,), lambda j, s, w_, t: (t,)),
+            pl.BlockSpec((t_tile, 1), lambda j, s, w_, t: (t, j)),
+        ],
+        out_specs=pl.BlockSpec((s_tile, 1, w_tile),
+                               lambda j, s, w_, t: (s, j, w_)),
+        out_shape=jax.ShapeDtypeStruct((n, d, w), jnp.float32),
+        interpret=interpret,
+    )(syn_idx, idx, values, signs)
+    return counts + delta

@@ -1,0 +1,154 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These are the entry points the engine uses. Each wrapper:
+  * does the hashing / layout prep in plain jnp (cheap, fusable),
+  * pads every dimension to its kernel tile,
+  * picks interpret mode automatically (True off-TPU, so the kernels
+    VALIDATE on CPU and compile natively on TPU),
+  * exposes the same signature as the core/ scatter path so the engine
+    can flip between `backend="xla"` and `backend="pallas"`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+from . import onehot_matmul, hll_max, sliding_dft, pairwise_corr as pc
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int = 0, value=0):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad, constant_values=value)
+
+
+def countmin_update(counts: jax.Array, syn_idx: jax.Array, items: jax.Array,
+                    values: jax.Array, mask: jax.Array, *, seeds: jax.Array,
+                    log2_width: int, weighted: bool = True) -> jax.Array:
+    """Pallas-backed stacked CountMin update. counts [n, d, w]."""
+    n, d, w = counts.shape
+    idx = hashing.bucket_hash(items, seeds, log2_width)
+    v = values if weighted else jnp.ones_like(values)
+    v = v * mask.astype(jnp.float32)
+    signs = jnp.ones((items.shape[0], d), jnp.float32)
+    return _scatter_call(counts, syn_idx, idx, v, signs)
+
+
+def ams_update(counts: jax.Array, syn_idx: jax.Array, items: jax.Array,
+               values: jax.Array, mask: jax.Array, *, seeds: jax.Array,
+               log2_width: int) -> jax.Array:
+    """Pallas-backed stacked AMS/count-sketch update. counts [n, d, w]."""
+    idx = hashing.bucket_hash(items, seeds, log2_width)
+    sgn = hashing.sign_hash(items, seeds)
+    v = values * mask.astype(jnp.float32)
+    return _scatter_call(counts, syn_idx, idx, v, sgn)
+
+
+def _scatter_call(counts, syn_idx, idx, values, signs):
+    n, d, w = counts.shape
+    t_tile = 512
+    s_tile = min(128, n) if n % min(128, n) == 0 else n
+    w_tile = min(256, w)
+    # pad T; padded rows get syn_idx = -1 -> match nothing
+    syn_idx = _pad_to(syn_idx.astype(jnp.int32), t_tile, value=-1)
+    idx = _pad_to(idx.astype(jnp.int32), t_tile, value=-1)
+    values = _pad_to(values.astype(jnp.float32), t_tile)
+    signs = _pad_to(signs.astype(jnp.float32), t_tile)
+    # pad n/w to tiles
+    n_pad = (-n) % s_tile
+    w_pad = (-w) % w_tile
+    padded = jnp.pad(counts, ((0, n_pad), (0, 0), (0, w_pad)))
+    out = onehot_matmul.onehot_scatter_add(
+        padded, syn_idx, idx, values, signs, s_tile=s_tile, w_tile=w_tile,
+        t_tile=t_tile, interpret=_interpret())
+    return out[:n, :, :w]
+
+
+def hll_update(regs: jax.Array, syn_idx: jax.Array, items: jax.Array,
+               mask: jax.Array, *, seed: int, p: int) -> jax.Array:
+    """Pallas-backed stacked HLL update. regs [n, m]."""
+    n, m = regs.shape
+    h = hashing.hash_u32(items, seed)
+    bucket = (h >> np.uint32(32 - p)).astype(jnp.int32)
+    rest = (h << np.uint32(p)).astype(jnp.uint32)
+    rank = jnp.where(rest == 0, 32 - p + 1, hashing.clz32(rest) + 1)
+    rank = jnp.where(mask, rank, 0).astype(jnp.int32)
+
+    t_tile = 128
+    s_tile = min(8, n)
+    m_tile = min(128, m)
+    syn_idx = _pad_to(syn_idx.astype(jnp.int32), t_tile)
+    bucket = _pad_to(bucket, t_tile)
+    rank = _pad_to(rank, t_tile)          # pad rank 0 => no-op
+    n_pad = (-n) % s_tile
+    m_pad = (-m) % m_tile
+    padded = jnp.pad(regs, ((0, n_pad), (0, m_pad)))
+    out = hll_max.hll_max_update(padded, syn_idx, bucket, rank,
+                                 s_tile=s_tile, m_tile=m_tile, t_tile=t_tile,
+                                 interpret=_interpret())
+    return out[:n, :m]
+
+
+def dft_step(re: jax.Array, im: jax.Array, delta: jax.Array,
+             mask: jax.Array, tw_re: jax.Array, tw_im: jax.Array):
+    """Pallas-backed batched sliding-DFT tick. re/im [S, F]."""
+    s, f = re.shape
+    s_tile = 512 if s % 512 == 0 else (s if s <= 512 else 128)
+    pad = (-s) % s_tile
+    if pad:
+        re = jnp.pad(re, ((0, pad), (0, 0)))
+        im = jnp.pad(im, ((0, pad), (0, 0)))
+        delta = jnp.pad(delta, (0, pad))
+        mask = jnp.pad(mask, (0, pad))
+    out_re, out_im = sliding_dft.sliding_dft_step(
+        re, im, delta.astype(jnp.float32), mask.astype(jnp.float32),
+        tw_re, tw_im, s_tile=s_tile, interpret=_interpret())
+    return out_re[:s], out_im[:s]
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = 128,
+                    bk: int = 128) -> jax.Array:
+    """Streaming-softmax attention, O(S) HBM. q/k/v [BH, S, D]; pads S
+    to block multiples (padded keys are masked by the causal/neg-inf
+    path: padded QUERIES produce garbage rows which are sliced off)."""
+    from . import flash_attention as fa
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    pq, pk = (-sq) % bq, (-sk) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        # padded keys get -inf via causal mask only when causal; for
+        # non-causal, pad keys with -inf-producing zeros is unsafe ->
+        # require divisibility there
+        assert causal or pk == 0, "non-causal needs Sk % bk == 0"
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0)))
+    out = fa.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
+                             interpret=_interpret())
+    return out[:, :sq]
+
+
+def corr_matrix(coeffs: jax.Array, *, tile: int = 256) -> jax.Array:
+    """Pairwise correlation estimates from [N, F, 2] or [N, K] coeffs."""
+    x = coeffs.reshape(coeffs.shape[0], -1).astype(jnp.float32)
+    n, k = x.shape
+    t = min(tile, n)
+    n_pad = (-n) % t
+    k_pad = (-k) % 128                    # MXU lane alignment
+    x = jnp.pad(x, ((0, n_pad), (0, k_pad)))
+    out = pc.pairwise_corr(x, i_tile=t, j_tile=t, interpret=_interpret())
+    return out[:n, :n]

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def onehot_scatter_add(counts, syn_idx, idx, values, signs):
+    """counts [n, d, w] scatter-add oracle."""
+    n, d, w = counts.shape
+    v = values[:, None] * signs                       # [T, d]
+    rows = jnp.arange(d)[None, :]
+    return counts.at[syn_idx[:, None], rows, idx].add(v)
+
+
+def hll_max_update(regs, syn_idx, bucket, rank):
+    """regs [n, m] max-scatter oracle (rank 0 entries are no-ops)."""
+    return regs.at[syn_idx, bucket].max(rank)
+
+
+def sliding_dft_step(re, im, delta, mask, tw_re, tw_im):
+    re2 = re + delta[:, None]
+    new_re = re2 * tw_re[None, :] - im * tw_im[None, :]
+    new_im = re2 * tw_im[None, :] + im * tw_re[None, :]
+    m = (mask > 0)[:, None]
+    return jnp.where(m, new_re, re), jnp.where(m, new_im, im)
+
+
+def pairwise_corr(x):
+    sq = jnp.sum(x * x, axis=-1)
+    gram = x @ x.T
+    return 1.0 - (sq[:, None] + sq[None, :] - 2.0 * gram)
+
+
+def flash_attention(q, k, v, causal=True):
+    """Plain softmax attention oracle. q/k/v [BH, S, D]."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(float(d))
+    if causal:
+        mask = jnp.tril(jnp.ones((q.shape[1], k.shape[1]), bool))
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,281 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import: jax locks the device count on first
+#   init. The dry-run (and only the dry-run) runs on 512 placeholder
+#   devices so jax.make_mesh can build the production meshes.
+"""Multi-pod dry-run: .lower().compile() every (architecture x input-shape
+x mesh) cell, prove the distribution config is coherent, and extract the
+roofline terms (memory_analysis + cost_analysis + collective-byte scan of
+the compiled HLO).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --out benchmarks/out
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import make_production_mesh, rules_for
+from repro.models import model as M
+from repro.sharding.specs import MeshRules, constrainer, sharding_for
+from repro.training import optim, train_step as TS
+from repro.launch.hlo_cost import analyze_hlo
+
+# TPU v5e-class hardware constants (roofline denominators)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+# ---------------------------------------------------------------------------
+# shardings for states / batches
+# ---------------------------------------------------------------------------
+def _attach(shape_tree, axes_tree, rules: MeshRules, mesh):
+    """ShapeDtypeStructs + logical axes -> sharded ShapeDtypeStructs."""
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+
+    def one(sds, axes):
+        sh = sharding_for(rules, axes, mesh, sds.shape)
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh)
+
+    return jax.tree.map(one, shape_tree, axes_tree, is_leaf=is_axes)
+
+
+def _batch_axes(specs: Dict[str, jax.ShapeDtypeStruct]):
+    out = {}
+    for k, v in specs.items():
+        if k == "pos":
+            out[k] = ()
+        elif k == "embeds":
+            out[k] = ("batch", "seq", None)
+        else:
+            out[k] = ("batch",) + (None,) * (len(v.shape) - 1)
+    return out
+
+
+def runnable(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
+    """None if the cell runs; otherwise the documented skip reason."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("skip: pure full-attention arch at 524k context "
+                "(sub-quadratic rule; see DESIGN.md)")
+    return None
+
+
+# ---------------------------------------------------------------------------
+# the three lowered programs
+# ---------------------------------------------------------------------------
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               rules_override: Optional[MeshRules] = None,
+               grad_accum: int = 1):
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    skip = runnable(cfg, shape)
+    if skip:
+        raise RuntimeError(skip)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_override or rules_for(cfg, mode=shape.mode)
+    constrain = constrainer(rules, mesh)
+    opt_cfg = optim.OptConfig(name=cfg.optimizer)
+    hooks = TS.TrainHooks()
+
+    spmd = (mesh, rules, shape.mode) if cfg.n_experts else None
+    with mesh:
+        if shape.mode == "train":
+            state_shapes = jax.eval_shape(
+                lambda: TS.init_train_state(cfg, opt_cfg,
+                                            jax.random.PRNGKey(0), hooks))
+            state_axes = TS.state_logical_axes(cfg, opt_cfg, hooks)
+            state_in = _attach(state_shapes, state_axes, rules, mesh)
+            specs = M.input_specs(cfg, shape)
+            batch_in = _attach(specs, _batch_axes(specs), rules, mesh)
+            fn = TS.make_train_step(cfg, opt_cfg, constrain,
+                                    grad_accum=grad_accum, hooks=hooks,
+                                    spmd=spmd)
+            lowered = jax.jit(fn).lower(state_in, batch_in)
+
+        elif shape.mode == "prefill":
+            params_shapes = M.params_shape(cfg)
+            params_in = _attach(params_shapes, M.logical_axes(cfg),
+                                rules, mesh)
+            specs = M.input_specs(cfg, shape)
+            batch_in = _attach(specs, _batch_axes(specs), rules, mesh)
+
+            def prefill(params, batch):
+                logits, caches, _ = M.forward(
+                    cfg, params, batch, constrain, want_caches=True,
+                    last_logit_only=True, spmd=spmd)
+                return logits, caches
+
+            lowered = jax.jit(prefill).lower(params_in, batch_in)
+
+        else:  # decode
+            params_shapes = M.params_shape(cfg)
+            params_in = _attach(params_shapes, M.logical_axes(cfg),
+                                rules, mesh)
+            cache_shapes = jax.eval_shape(
+                lambda: M.init_caches(cfg, shape.global_batch,
+                                      shape.seq_len))
+            cache_in = _attach(cache_shapes, M.cache_logical_axes(cfg),
+                               rules, mesh)
+            specs = M.input_specs(cfg, shape)
+            batch_in = _attach(specs, _batch_axes(specs), rules, mesh)
+
+            def serve_step(params, caches, tokens, pos):
+                logits, new_caches = M.decode_step_fn(
+                    cfg, params, caches, tokens, pos, constrain, spmd=spmd)
+                return jnp.argmax(logits, -1), new_caches
+
+            lowered = jax.jit(serve_step).lower(
+                params_in, cache_in, batch_in["tokens"], batch_in["pos"])
+    return lowered, cfg, shape, mesh
+
+
+# ---------------------------------------------------------------------------
+# roofline extraction
+# ---------------------------------------------------------------------------
+def analyze(lowered, cfg: ModelConfig, shape: ShapeConfig, mesh) -> Dict:
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    # trip-count-aware per-device accounting (cost_analysis counts while
+    # bodies once — see launch/hlo_cost.py)
+    acc = analyze_hlo(hlo)
+    coll = dict(acc["collectives"], total_bytes=acc["collective_bytes"])
+    n_chips = int(np.prod(list(mesh.shape.values())))
+
+    flops = float(acc["flops"])
+    bytes_accessed = float(acc["bytes"])
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = acc["collective_bytes"] / ICI_BW
+
+    tokens = shape.global_batch * (1 if shape.mode == "decode"
+                                   else shape.seq_len)
+    n_active = cfg.active_param_count()
+    if shape.mode == "train":
+        model_flops_global = 6 * n_active * tokens   # fwd + bwd
+    else:
+        model_flops_global = 2 * n_active * tokens   # fwd only
+    model_flops_per_chip = model_flops_global / n_chips
+
+    terms = dict(compute_s=compute_s, memory_s=memory_s,
+                 collective_s=collective_s)
+    dominant = max(terms, key=terms.get)
+    denom = max(compute_s, memory_s, collective_s, 1e-30)
+    useful_frac = model_flops_per_chip / PEAK_FLOPS / denom
+
+    record = dict(
+        arch=cfg.name, shape=shape.name, mode=shape.mode,
+        mesh=dict(mesh.shape), chips=n_chips,
+        compile_seconds=round(compile_s, 1),
+        per_device=dict(
+            flops=flops, bytes_accessed=bytes_accessed,
+            bytes_upper=float(acc["bytes_upper"]),
+            arg_bytes=float(acc["arg_bytes"]),
+            xla_flops_scan_once=float(cost.get("flops", 0.0)),
+            xla_bytes_scan_once=float(cost.get("bytes accessed", 0.0)),
+            argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+            output_bytes=getattr(mem, "output_size_in_bytes", None),
+            temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+            peak_bytes=(getattr(mem, "temp_size_in_bytes", 0) or 0)
+            + (getattr(mem, "argument_size_in_bytes", 0) or 0),
+        ),
+        collectives=coll,
+        roofline=dict(
+            **{k: float(v) for k, v in terms.items()},
+            dominant=dominant,
+            model_flops_global=float(model_flops_global),
+            model_flops_per_chip=float(model_flops_per_chip),
+            hlo_useful_ratio=float(model_flops_per_chip
+                                   / max(flops, 1e-30)),
+            roofline_fraction=float(useful_frac),
+        ),
+    )
+    return record
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             grad_accum: int = 1) -> Dict:
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    skip = runnable(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    if skip:
+        return dict(arch=arch, shape=shape_name, mesh=mesh_name,
+                    skipped=skip)
+    try:
+        lowered, cfg, shape, mesh = lower_cell(arch, shape_name, multi_pod,
+                                               grad_accum=grad_accum)
+        rec = analyze(lowered, cfg, shape, mesh)
+        rec["mesh_name"] = mesh_name
+        return rec
+    except Exception:
+        return dict(arch=arch, shape=shape_name, mesh=mesh_name,
+                    error=traceback.format_exc()[-4000:])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="benchmarks/out")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = list(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[cached] {tag}")
+                    continue
+                t0 = time.time()
+                rec = run_cell(arch, shape, mp, grad_accum=args.grad_accum)
+                rec["wall_seconds"] = round(time.time() - t0, 1)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = ("SKIP" if "skipped" in rec
+                          else "ERR " if "error" in rec else "ok  ")
+                extra = ""
+                if "roofline" in rec:
+                    r = rec["roofline"]
+                    extra = (f" dom={r['dominant']}"
+                             f" frac={r['roofline_fraction']:.3f}")
+                print(f"[{status}] {tag} ({rec['wall_seconds']}s){extra}",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

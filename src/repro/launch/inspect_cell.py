@@ -1,0 +1,130 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Perf-iteration microscope: lower one cell and print the top dots (by
+trip-multiplied FLOPs), top collectives (by trip-multiplied bytes), and
+the largest live buffers — the 'profile' the §Perf loop reasons over.
+
+  PYTHONPATH=src python -m repro.launch.inspect_cell --arch qwen2-72b \
+      --shape train_4k
+"""
+import argparse
+import re
+from collections import defaultdict
+
+import numpy as np
+
+from repro.launch import dryrun
+from repro.launch.hlo_cost import (_parse_computations, _DEF_RE, _SHAPE_RE,
+                                   _shape_bytes, _shape_dims, _COLLECTIVES)
+
+
+def _multipliers(comps):
+    entry = comps["__entry__"]
+    mult = {entry.name: 1.0}
+    order, seen = [entry.name], {entry.name}
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult.get(cname, 1.0)
+        for line in comp.lines:
+            wm = re.search(r"body=%([\w.\-]+), *condition=%([\w.\-]+)|"
+                           r"condition=%([\w.\-]+), *body=%([\w.\-]+)", line)
+            if wm and " while(" in line:
+                body = wm.group(1) or wm.group(4)
+                trip = 1.0
+                tm = re.search(r'"known_trip_count":{"n":"(\d+)"}', line)
+                if tm:
+                    trip = float(tm.group(1))
+                mult[body] = mult.get(body, 0.0) + m * trip
+                if body not in seen:
+                    seen.add(body)
+                    order.append(body)
+            for ref in re.findall(r"calls=%([\w.\-]+)", line):
+                mult[ref] = mult.get(ref, 0.0) + m
+                if ref not in seen:
+                    seen.add(ref)
+                    order.append(ref)
+    return mult, seen
+
+
+def inspect(hlo_text: str, top: int = 12):
+    comps = _parse_computations(hlo_text)
+    mult, seen = _multipliers(comps)
+    dots, colls, bufs = [], [], []
+    for cname in seen:
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult.get(cname, 1.0)
+        for line in comp.lines:
+            d = _DEF_RE.match(line)
+            if not d:
+                continue
+            rhs = d.group(2)
+            tm = re.match(r"^(\([^=]*?\)|[\w\[\],]+(?:\{[\d,]*\})?)\s*(.*)$",
+                          rhs)
+            if not tm:
+                continue
+            out_type, rest = tm.group(1), tm.group(2)
+            meta = re.search(r'op_name="([^"]+)"', rhs)
+            op_name = meta.group(1) if meta else d.group(1)
+            if " dot(" in rhs:
+                out_dims = _shape_dims(out_type)
+                out_elems = float(np.prod(out_dims)) if out_dims else 1.0
+                cm = re.search(r"lhs_contracting_dims={([0-9,]*)}", rhs)
+                k = 1
+                am = re.search(r"dot\((%[\w.\-]+)", rhs)
+                if cm and am and am.group(1) in comp.symbols:
+                    lhs_dims = _shape_dims(comp.symbols[am.group(1)])
+                    for ci in cm.group(1).split(","):
+                        if ci and int(ci) < len(lhs_dims):
+                            k *= lhs_dims[int(ci)]
+                dots.append((m * 2.0 * out_elems * k, m, out_type[:48],
+                             op_name[-80:]))
+            opm = re.match(r"\s*([\w\-]+)\(", rest)
+            op = opm.group(1) if opm else ""
+            if any(op == c or op == c + "-start" for c in _COLLECTIVES):
+                colls.append((m * _shape_bytes(out_type), m, op,
+                              out_type[:64], op_name[-70:]))
+            b = _shape_bytes(out_type)
+            if b > 2**28:
+                bufs.append((b, out_type[:64], op[:20], op_name[-60:]))
+
+    print("== top dots (flops x trip, per device) ==")
+    for f, m, shp, name in sorted(dots, reverse=True)[:top]:
+        print(f"  {f:.3e} (x{m:4.0f}) {shp:48s} {name}")
+    print(f"  TOTAL dot flops: {sum(d[0] for d in dots):.3e}")
+    print("== top collectives (bytes x trip, per device) ==")
+    for b, m, op, shp, name in sorted(colls, reverse=True)[:top]:
+        print(f"  {b/2**30:8.2f} GiB (x{m:4.0f}) {op:18s} {shp:40s} {name}")
+    print(f"  TOTAL collective: {sum(c[0] for c in colls)/2**30:.2f} GiB")
+    print("== largest single buffers ==")
+    seen_shapes = set()
+    for b, shp, op, name in sorted(bufs, reverse=True)[:top]:
+        key = (shp, op)
+        if key in seen_shapes:
+            continue
+        seen_shapes.add(key)
+        print(f"  {b/2**30:8.2f} GiB {op:14s} {shp:52s} {name}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+    lowered, cfg, shape, mesh = dryrun.lower_cell(args.arch, args.shape,
+                                                  args.multi)
+    compiled = lowered.compile()
+    inspect(compiled.as_text(), args.top)
+
+
+if __name__ == "__main__":
+    main()

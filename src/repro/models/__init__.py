@@ -1,0 +1,4 @@
+from . import attention, layers, moe, ssm  # noqa: F401
+from .model import (init_params, params_shape, logical_axes, forward,
+                    loss_fn, decode_step_fn, init_caches,
+                    cache_logical_axes, input_specs)  # noqa: F401

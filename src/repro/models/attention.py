@@ -1,0 +1,174 @@
+"""GQA attention: train/prefill (causal, optionally Q-chunked for long
+sequences) and single-token decode against a KV cache.
+
+Decode supports a seq-sharded cache: softmax over the (sharded) cache axis
+is expressed as global ops under pjit, so the partitioner emits the
+flash-decoding-style partial-softmax combine across chips.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from .layers import apply_rope, init_dense
+
+import os
+
+_NEG = -1e30
+# Q-chunk long sequences (peak-memory control); env override for perf
+# experiments (§Perf)
+_CHUNK_THRESHOLD = int(os.environ.get("REPRO_ATTN_CHUNK_THRESHOLD", 4096))
+_Q_CHUNK = int(os.environ.get("REPRO_ATTN_Q_CHUNK", 1024))
+_EXPAND_KV = os.environ.get("REPRO_ATTN_EXPAND_KV", "1") == "1"
+
+
+def init_attn(key, cfg: ModelConfig) -> Dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = dict(
+        wq=init_dense(ks[0], (d, h, hd)),
+        wk=init_dense(ks[1], (d, kv, hd)),
+        wv=init_dense(ks[2], (d, kv, hd)),
+        wo=init_dense(ks[3], (h, hd, d), in_axis=(0, 1)),
+    )
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), jnp.bfloat16)
+        p["bk"] = jnp.zeros((kv, hd), jnp.bfloat16)
+        p["bv"] = jnp.zeros((kv, hd), jnp.bfloat16)
+    return p
+
+
+def _qkv(x, p, cfg: ModelConfig, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _expand_kv(k, cfg: ModelConfig, constrain):
+    """Broadcast KV heads to the full H so every attention tensor carries
+    an H axis shardable by TP — the (kv, g) reshape would break head
+    sharding whenever kv < the model-axis size (§Perf iteration 3)."""
+    if not _EXPAND_KV:
+        return k
+    g = cfg.n_heads // cfg.n_kv_heads
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+    return constrain(k, ("batch", None, "tensor", None))
+
+
+def _gqa_scores(q, k, cfg: ModelConfig):
+    """q [B,Sq,H,hd], k [B,Sk,KV|H,hd] -> scores.
+
+    Expanded path: [B,H,Sq,Sk]. Grouped path: [B,KV,G,Sq,Sk]."""
+    if k.shape[2] == cfg.n_heads:
+        return jnp.einsum("bqhd,bshd->bhqs", q, k) / np.sqrt(cfg.hd)
+    g = cfg.n_heads // cfg.n_kv_heads
+    b, sq = q.shape[0], q.shape[1]
+    qg = q.reshape(b, sq, cfg.n_kv_heads, g, cfg.hd)
+    return jnp.einsum("bqkgh,bskh->bkgqs", qg, k) / np.sqrt(cfg.hd)
+
+
+def _gqa_out(probs, v, cfg: ModelConfig):
+    if probs.ndim == 4:
+        return jnp.einsum("bhqs,bshd->bqhd", probs, v)
+    b = probs.shape[0]
+    sq = probs.shape[3]
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(b, sq, cfg.n_heads, cfg.hd)
+
+
+def attention(x: jax.Array, p: Dict, cfg: ModelConfig,
+              positions: jax.Array,
+              constrain=lambda t, a: t) -> Tuple[jax.Array, Dict]:
+    """Causal self-attention; returns (out [B,S,d], cache {k, v})."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(x, p, cfg, positions)
+    cache = dict(k=k, v=v)
+    if cfg.attn_layout == "head":
+        # head-sharded layout: gather seq once, expand kv to H so every
+        # attention tensor carries a TP-shardable H axis (§Perf iter 3)
+        q = constrain(q, ("batch", None, "tensor", None))
+        k = _expand_kv(k, cfg, constrain)
+        v = _expand_kv(v, cfg, constrain)
+    # "seq" layout: leave q/k/v in the residual stream's (SP) layout and
+    # let GSPMD schedule a ring/permute attention — measured better for
+    # the big dense archs (§Perf qwen2-72b iterations)
+    if s > _CHUNK_THRESHOLD:
+        out = _chunked_causal(q, k, v, cfg)
+    else:
+        scores = _gqa_scores(q, k, cfg).astype(jnp.float32)
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        mask = mask[(None,) * (scores.ndim - 2)]
+        scores = jnp.where(mask, scores, _NEG)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = _gqa_out(probs, v, cfg)
+    return jnp.einsum("bqhk,hkd->bqd", out, p["wo"]), cache
+
+
+def _chunked_causal(q, k, v, cfg: ModelConfig):
+    """Scan over Q chunks (flash-style peak-memory control for 32k+)."""
+    b, s, h, hd = q.shape
+    nc = s // _Q_CHUNK
+    qc = q.reshape(b, nc, _Q_CHUNK, h, hd).transpose(1, 0, 2, 3, 4)
+
+    def chunk(ci, qi):
+        # keys up to the end of this chunk matter; causal-mask the tail
+        scores = _gqa_scores(qi, k, cfg).astype(jnp.float32)
+        kpos = jnp.arange(s)[None, :]
+        qpos = ci * _Q_CHUNK + jnp.arange(_Q_CHUNK)[:, None]
+        causal = (kpos <= qpos)[(None,) * (scores.ndim - 2)]
+        scores = jnp.where(causal, scores, _NEG)
+        probs = jax.nn.softmax(scores, axis=-1).astype(qi.dtype)
+        return _gqa_out(probs, v, cfg)
+
+    out = jax.lax.map(lambda args: chunk(*args),
+                      (jnp.arange(nc), qc))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+
+
+def decode_step(x: jax.Array, p: Dict, cfg: ModelConfig, cache: Dict,
+                pos: jax.Array) -> Tuple[jax.Array, Dict]:
+    """x [B,1,d]; cache k/v [B,S_max,KV,hd]; pos [] current position.
+
+    Writes the new kv at `pos`, attends over cache[<= pos].
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _qkv(x, p, cfg, positions)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"],
+                                            k_new.astype(cache["k"].dtype),
+                                            pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"],
+                                            v_new.astype(cache["v"].dtype),
+                                            pos, axis=1)
+    # decode keeps the grouped-KV form unless the arch runs head layout:
+    # expanding kv would materialize a G-times copy of the (huge) cache
+    g = cfg.n_heads // cfg.n_kv_heads
+    expand = g > 1 and _EXPAND_KV and cfg.attn_layout == "head"
+    k_exp = jnp.repeat(k, g, axis=2) if expand else k
+    v_exp = jnp.repeat(v, g, axis=2) if expand else v
+    scores = _gqa_scores(q, k_exp, cfg).astype(jnp.float32)
+    s_max = k.shape[1]
+    valid = jnp.arange(s_max) <= pos
+    scores = jnp.where(valid[(None,) * (scores.ndim - 2)], scores, _NEG)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = _gqa_out(probs, v_exp, cfg)
+    return jnp.einsum("bqhk,hkd->bqd", out, p["wo"]), dict(k=k, v=v)
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int,
+               dtype=jnp.bfloat16) -> Dict:
+    shape = (batch, s_max, cfg.n_kv_heads, cfg.hd)
+    return dict(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))

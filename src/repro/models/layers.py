@@ -1,0 +1,55 @@
+"""Shared layers: norms, rotary embeddings, MLPs, initializers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale)).astype(dt)
+
+
+def init_dense(key, shape, in_axis: int = 0) -> jax.Array:
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else int(
+        np.prod([shape[a] for a in in_axis]))
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(jnp.bfloat16)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [..., S, H, hd]; positions [..., S]."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))
+    ang = positions[..., None].astype(jnp.float32) * freqs        # [...,S,hd/2]
+    cos = jnp.cos(ang)[..., None, :]                              # [...,S,1,hd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def mlp_forward(x: jax.Array, p: dict, act: str) -> jax.Array:
+    """Gated MLP: SwiGLU (silu) or GeGLU (gelu)."""
+    g = x @ p["wg"]
+    u = x @ p["wu"]
+    gate = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)
+    return (gate * u) @ p["wd"]
+
+
+def init_mlp(key, d_model: int, d_ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return dict(
+        wg=init_dense(k1, (d_model, d_ff)),
+        wu=init_dense(k2, (d_model, d_ff)),
+        wd=init_dense(k3, (d_ff, d_model)),
+    )

@@ -1,0 +1,378 @@
+"""Composable LM: dense / MoE / SSM / hybrid blocks assembled from a
+ModelConfig, with scan-over-layer-groups (weights stacked per repeating
+period), remat, and logical-axis sharding annotations throughout.
+
+Entry points:
+  init_params / params_shape / logical_axes
+  forward(...)            train & prefill (returns caches for prefill)
+  loss_fn(...)            next-token CE + MoE aux losses
+  decode_step_fn(...)     one-token serve step against caches
+  init_caches(...)        cache pytree for a (batch, s_max)
+  input_specs(...)        ShapeDtypeStruct stand-ins for the dry-run
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import rms_norm, init_dense, init_mlp, mlp_forward
+
+_NO_CONSTRAIN = lambda t, axes: t
+
+
+@jax.custom_vjp
+def _ct_barrier(x):
+    """Identity whose COTANGENT is forced to the primal dtype (bf16).
+
+    f32 segments inside blocks (norm/softmax/router) otherwise promote the
+    whole backward residual stream to f32 — doubling every bwd collective
+    payload and activation cotangent buffer (§Perf iteration 6)."""
+    return x
+
+
+def _ct_fwd(x):
+    return x, jnp.zeros((0,), x.dtype)     # dtype token (valid JAX type)
+
+
+def _ct_bwd(token, g):
+    return (g.astype(token.dtype),)
+
+
+_ct_barrier.defvjp(_ct_fwd, _ct_bwd)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_block(key, cfg: ModelConfig, kind: Tuple[str, str]) -> Dict:
+    mixer, ffn = kind
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": jnp.zeros((cfg.d_model,), jnp.float32)}
+    if mixer == "attn":
+        p["attn"] = attn_mod.init_attn(ks[0], cfg)
+    else:
+        p["mamba"] = ssm_mod.init_ssm(ks[0], cfg)
+    if ffn != "none":
+        p["ln2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    if ffn == "dense":
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff)
+    elif ffn == "moe":
+        p["moe"] = moe_mod.init_moe(ks[2], cfg)
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict:
+    plan = cfg.layer_plan()
+    period = cfg.period()
+    n_groups = cfg.n_layers // period
+    keys = jax.random.split(key, period + 4)
+    params: Dict[str, Any] = dict(
+        embed=init_dense(keys[-1], (cfg.vocab, cfg.d_model)),
+        final_ln=jnp.zeros((cfg.d_model,), jnp.float32),
+    )
+    if not cfg.tie_embeddings:
+        params["head"] = init_dense(keys[-2], (cfg.d_model, cfg.vocab))
+    if cfg.frontend == "embeds":
+        params["stub"] = init_dense(keys[-3], (cfg.d_model, cfg.d_model))
+    layers = {}
+    for pos in range(period):
+        gkeys = jax.random.split(keys[pos], n_groups)
+        layers[f"pos{pos}"] = jax.vmap(
+            lambda k: _init_block(k, cfg, plan[pos]))(gkeys)
+    params["layers"] = layers
+    return params
+
+
+def params_shape(cfg: ModelConfig) -> Dict:
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def logical_axes(cfg: ModelConfig) -> Dict:
+    """Pytree (matching init_params) of logical-axis tuples."""
+    plan = cfg.layer_plan()
+    period = cfg.period()
+    g = None  # leading group axis is never sharded
+
+    def attn_axes():
+        p = dict(wq=(g, "fsdp", "tensor", None),
+                 wk=(g, "fsdp", "kv_tensor", None),
+                 wv=(g, "fsdp", "kv_tensor", None),
+                 wo=(g, "tensor", None, "fsdp"))
+        if cfg.qkv_bias:
+            p.update(bq=(g, "tensor", None), bk=(g, "kv_tensor", None),
+                     bv=(g, "kv_tensor", None))
+        return p
+
+    def mlp_axes():
+        return dict(wg=(g, "fsdp", "tensor"), wu=(g, "fsdp", "tensor"),
+                    wd=(g, "tensor", "fsdp"))
+
+    def moe_axes():
+        # E is batched (unsharded): shard-local dispatch + f-TP + d-FSDP
+        # works uniformly for E = 8 / 16 / 128 (see moe_ffn_shardmap)
+        p = dict(router=(g, None, None),
+                 wg=(g, None, "fsdp", "tensor"),
+                 wu=(g, None, "fsdp", "tensor"),
+                 wd=(g, None, "tensor", "fsdp"))
+        if cfg.moe_dense_residual:
+            p["dense"] = mlp_axes()
+        return p
+
+    def ssm_axes():
+        return dict(in_proj=(g, "fsdp", "tensor"),
+                    conv_w=(g, None, "tensor"), conv_b=(g, "tensor"),
+                    a_log=(g, None), d_skip=(g, None), dt_bias=(g, None),
+                    norm=(g, "tensor"), out_proj=(g, "tensor", "fsdp"))
+
+    layers = {}
+    for pos in range(period):
+        mixer, ffn = plan[pos]
+        p: Dict[str, Any] = {"ln1": (g, None)}
+        if mixer == "attn":
+            p["attn"] = attn_axes()
+        else:
+            p["mamba"] = ssm_axes()
+        if ffn != "none":
+            p["ln2"] = (g, None)
+        if ffn == "dense":
+            p["mlp"] = mlp_axes()
+        elif ffn == "moe":
+            p["moe"] = moe_axes()
+        layers[f"pos{pos}"] = p
+
+    out: Dict[str, Any] = dict(
+        embed=("tensor", "fsdp"), final_ln=(None,), layers=layers)
+    if not cfg.tie_embeddings:
+        out["head"] = ("fsdp", "tensor")
+    if cfg.frontend == "embeds":
+        out["stub"] = ("fsdp", "tensor")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+def _moe_call(h2, p, cfg, constrain, spmd):
+    if spmd is not None:
+        mesh, rules, mode = (spmd if len(spmd) == 3 else (*spmd, "train"))
+        n_data = mesh.shape.get("data", 1)
+        experts_too_big = (cfg.expert_param_count() * 2
+                           / mesh.shape.get("model", 1) > 12e9)
+        if (mode == "decode" and experts_too_big
+                and cfg.n_experts % n_data == 0
+                and h2.shape[0] % _moe_batch_div(mesh) == 0):
+            # giants whose expert weights can't replicate: EP-resident
+            # decode (see moe_ffn_ep_decode)
+            return moe_mod.moe_ffn_ep_decode(h2, p, cfg, mesh, rules)
+        return moe_mod.moe_ffn_shardmap(h2, p, cfg, mesh, rules, mode)
+    return moe_mod.moe_ffn(h2, p, cfg, constrain)
+
+
+def _moe_batch_div(mesh):
+    n = 1
+    for a in ("pod", "data"):
+        n *= mesh.shape.get(a, 1)
+    return n
+
+
+def _block_fwd(x, p, kind, cfg: ModelConfig, positions, constrain,
+               spmd=None):
+    """Train/prefill block. Returns (x, cache, aux)."""
+    mixer, ffn = kind
+    aux = dict(lb_loss=jnp.zeros((), jnp.float32),
+               z_loss=jnp.zeros((), jnp.float32))
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if mixer == "attn":
+        out, cache = attn_mod.attention(h, p["attn"], cfg, positions,
+                                        constrain=constrain)
+    else:
+        out, cache = ssm_mod.ssm_forward(h, p["mamba"], cfg,
+                                         constrain=constrain)
+    x = x + out
+    x = constrain(x, ("batch", "seq", None))
+    if ffn != "none":
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if ffn == "dense":
+            x = x + mlp_forward(h2, p["mlp"], cfg.mlp_act)
+        else:
+            mo, moe_aux = _moe_call(h2, p["moe"], cfg, constrain, spmd)
+            x = x + mo
+            aux["lb_loss"] += moe_aux["lb_loss"]
+            aux["z_loss"] += moe_aux["z_loss"]
+    x = constrain(x, ("batch", "seq", None))
+    return x, cache, aux
+
+
+def _block_decode(x, p, kind, cfg: ModelConfig, cache, pos, constrain,
+                  spmd=None):
+    mixer, ffn = kind
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if mixer == "attn":
+        out, cache = attn_mod.decode_step(h, p["attn"], cfg, cache, pos)
+    else:
+        out, cache = ssm_mod.ssm_decode_step(h, p["mamba"], cfg, cache)
+    x = x + out
+    if ffn != "none":
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if ffn == "dense":
+            x = x + mlp_forward(h2, p["mlp"], cfg.mlp_act)
+        else:
+            mo, _ = _moe_call(h2, p["moe"], cfg, constrain, spmd)
+            x = x + mo
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+def _embed_inputs(cfg: ModelConfig, params, batch, constrain):
+    if "embeds" in batch:
+        x = batch["embeds"].astype(jnp.bfloat16) @ params["stub"]
+    else:
+        x = params["embed"][batch["tokens"]]
+    return constrain(x, ("batch", "seq", None))
+
+
+def forward(cfg: ModelConfig, params: Dict, batch: Dict,
+            constrain=_NO_CONSTRAIN, *, want_caches: bool = False,
+            last_logit_only: bool = False, spmd=None):
+    """Returns (logits, caches, aux). Caches only when want_caches."""
+    plan = cfg.layer_plan()
+    period = cfg.period()
+    x = _embed_inputs(cfg, params, batch, constrain)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def group_fn(carry, group_params):
+        x, lb, zl = carry
+        caches = {}
+        for pos in range(period):
+            fn = functools.partial(_block_fwd, kind=plan[pos], cfg=cfg,
+                                   positions=positions, constrain=constrain,
+                                   spmd=spmd)
+            if cfg.remat:
+                fn = jax.checkpoint(fn)
+            x, cache, aux = fn(x, group_params[f"pos{pos}"])
+            if os.environ.get("REPRO_CT_BARRIER", "1") == "1":
+                x = _ct_barrier(x)
+            caches[f"pos{pos}"] = cache
+            lb = lb + aux["lb_loss"]
+            zl = zl + aux["z_loss"]
+        return (x, lb, zl), (caches if want_caches else None)
+
+    zero = jnp.zeros((), jnp.float32)
+    (x, lb, zl), caches = jax.lax.scan(group_fn, (x, zero, zero),
+                                       params["layers"])
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    if last_logit_only:
+        x = x[:, -1:, :]
+    head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    logits = x @ head.astype(x.dtype)
+    logits = constrain(logits, ("batch", None, "tensor"))
+    aux = dict(lb_loss=lb, z_loss=zl)
+    return logits, caches, aux
+
+
+def loss_fn(cfg: ModelConfig, params: Dict, batch: Dict,
+            constrain=_NO_CONSTRAIN, spmd=None):
+    """Next-token CE (labels already shifted by the pipeline) + MoE aux."""
+    logits, _, aux = forward(cfg, params, batch, constrain, spmd=spmd)
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, batch["labels"][..., None].astype(jnp.int32), axis=-1)[..., 0]
+    ce = jnp.mean(lse - gold)
+    total = ce + 0.01 * aux["lb_loss"] + 0.001 * aux["z_loss"]
+    metrics = dict(ce=ce, lb_loss=aux["lb_loss"], z_loss=aux["z_loss"])
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+def init_caches(cfg: ModelConfig, batch: int, s_max: int) -> Dict:
+    plan = cfg.layer_plan()
+    period = cfg.period()
+    n_groups = cfg.n_layers // period
+    caches = {}
+    for pos in range(period):
+        mixer = plan[pos][0]
+        if mixer == "attn":
+            one = attn_mod.init_cache(cfg, batch, s_max)
+        else:
+            one = ssm_mod.init_ssm_cache(cfg, batch)
+        caches[f"pos{pos}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape).copy(), one)
+    return caches
+
+
+def cache_logical_axes(cfg: ModelConfig) -> Dict:
+    plan = cfg.layer_plan()
+    period = cfg.period()
+    out = {}
+    for pos in range(period):
+        if plan[pos][0] == "attn":
+            out[f"pos{pos}"] = dict(k=(None, "batch", "kv_seq", None, None),
+                                    v=(None, "batch", "kv_seq", None, None))
+        else:
+            out[f"pos{pos}"] = dict(h=(None, "batch", "tensor", None, None),
+                                    conv=(None, "batch", None, "tensor"))
+    return out
+
+
+def decode_step_fn(cfg: ModelConfig, params: Dict, caches: Dict,
+                   tokens: jax.Array, pos: jax.Array,
+                   constrain=_NO_CONSTRAIN, spmd=None):
+    """One serve step: tokens [B] at position `pos` -> logits [B, vocab]."""
+    plan = cfg.layer_plan()
+    period = cfg.period()
+    x = params["embed"][tokens][:, None, :]          # [B, 1, d]
+    x = constrain(x, ("batch", None, None))
+
+    def group_fn(x, scanned):
+        group_params, cache = scanned
+        new_caches = {}
+        for p in range(period):
+            x, c = _block_decode(x, group_params[f"pos{p}"], plan[p], cfg,
+                                 cache[f"pos{p}"], pos, constrain,
+                                 spmd=spmd)
+            new_caches[f"pos{p}"] = c
+        return x, new_caches
+
+    x, new_caches = jax.lax.scan(group_fn, x, (params["layers"], caches))
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    logits = (x @ head.astype(x.dtype))[:, 0, :]
+    logits = constrain(logits, ("batch", "tensor"))
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# dry-run stand-ins
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.mode in ("train", "prefill"):
+        specs = {}
+        if cfg.frontend == "embeds":
+            specs["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                   jnp.bfloat16)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if shape.mode == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return specs
+    # decode: one new token against an s-long cache
+    return dict(tokens=jax.ShapeDtypeStruct((b,), jnp.int32),
+                pos=jax.ShapeDtypeStruct((), jnp.int32))

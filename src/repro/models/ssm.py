@@ -1,0 +1,195 @@
+"""Mamba-2 SSD layer (state-space duality, [arXiv:2405.21060]).
+
+Chunked train/prefill: a lax.scan over sequence chunks carries the
+[B, H, P, N] state; within each chunk the dual quadratic form runs as
+dense einsums (MXU work), giving O(S * Q) time with Q-sized attention-like
+blocks instead of O(S^2). Decode is the O(1) recurrent step on the carried
+state — no KV cache, which is why the ssm/hybrid archs are the long_500k
+architectures.
+
+Layout: x [B,S,d] -> in_proj -> [z | x_conv | B | C | dt]; causal depthwise
+conv over (x,B,C); scalar-A-per-head discretization; gated RMSNorm out.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from .layers import init_dense, rms_norm
+
+
+def init_ssm(key, cfg: ModelConfig) -> Dict:
+    d, din, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = din + 2 * n
+    ks = jax.random.split(key, 4)
+    return dict(
+        in_proj=init_dense(ks[0], (d, 2 * din + 2 * n + h)),
+        conv_w=(jax.random.normal(ks[1], (cfg.conv_width, conv_ch),
+                                  jnp.float32) * 0.1).astype(jnp.bfloat16),
+        conv_b=jnp.zeros((conv_ch,), jnp.bfloat16),
+        a_log=jnp.zeros((h,), jnp.float32),              # A = -exp(a_log)
+        d_skip=jnp.ones((h,), jnp.float32),
+        dt_bias=jnp.zeros((h,), jnp.float32),
+        norm=jnp.zeros((din,), jnp.float32),
+        out_proj=init_dense(ks[2], (din, d)),
+    )
+
+
+def _split(z: jax.Array, cfg: ModelConfig):
+    din, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    zg = z[..., :din]
+    xbc = z[..., din:2 * din + 2 * n]
+    dt = z[..., 2 * din + 2 * n:]
+    return zg, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over sequence (f32 accum to match the decode
+    path bit-for-bit). xbc [B,S,C], w [W,C]."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc.astype(jnp.float32), ((0, 0), (width - 1, 0), (0, 0)))
+    wf = w.astype(jnp.float32)
+    out = sum(pad[:, i:i + xbc.shape[1], :] * wf[i][None, None, :]
+              for i in range(width))
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _ssd_chunks(xs, bmat, cmat, dt, a, cfg: ModelConfig, h0=None):
+    """Chunk-scanned SSD. xs [B,S,H,P]; bmat/cmat [B,S,N]; dt [B,S,H].
+
+    Returns (y [B,S,H,P], h_final [B,H,P,N]).
+    """
+    b, s, h, p = xs.shape
+    n = bmat.shape[-1]
+    q = min(cfg.ssm_chunk, s)
+    pad = (-s) % q
+    if pad:
+        # dt = 0 on padding => exp(dt*A) = 1 (state carried) and zero input
+        # injection: padding is an exact identity on the recurrence.
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    s_orig, s = s, s + pad
+    nc = s // q
+
+    xs_c = xs.reshape(b, nc, q, h, p).transpose(1, 0, 2, 3, 4)
+    b_c = bmat.reshape(b, nc, q, n).transpose(1, 0, 2, 3)
+    c_c = cmat.reshape(b, nc, q, n).transpose(1, 0, 2, 3)
+    dt_c = dt.reshape(b, nc, q, h).transpose(1, 0, 2, 3)
+    dalog_c = dt_c * a[None, None, None, :]              # [nc,B,Q,H] (<= 0)
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    causal = jnp.tril(jnp.ones((q, q), bool))
+
+    def step(h_prev, inp):
+        xc, bc, cc, dtc, dal = inp
+        seg = jnp.cumsum(dal, axis=1)                    # [B,Q,H]
+        # carry-in contribution decayed to each position
+        y_inter = jnp.einsum("bqn,bhpn,bqh->bqhp", cc, h_prev,
+                             jnp.exp(seg)).astype(jnp.float32)
+        # intra-chunk dual (attention-like) form
+        cb = jnp.einsum("bqn,bsn->bqs", cc, bc)          # [B,Q,Q]
+        decay = jnp.exp(seg[:, :, None, :] - seg[:, None, :, :])  # [B,q,s,H]
+        w = cb[..., None] * decay * dtc[:, None, :, :]
+        w = jnp.where(causal[None, :, :, None], w, 0.0)
+        y_intra = jnp.einsum("bqsh,bshp->bqhp", w, xc.astype(jnp.float32))
+        # state update
+        tot = seg[:, -1, :]                              # [B,H]
+        w_state = jnp.exp(tot[:, None, :] - seg) * dtc   # [B,Q,H]
+        h_new = (h_prev * jnp.exp(tot)[:, :, None, None]
+                 + jnp.einsum("bqh,bqn,bqhp->bhpn", w_state, bc,
+                              xc.astype(jnp.float32)))
+        # stack per-chunk outputs in bf16: halves the scan-carry HBM and
+        # collective payloads (§Perf iteration 2); accumulation stays f32
+        return h_new, (y_inter + y_intra).astype(xs.dtype)
+
+    h_final, y = jax.lax.scan(step, h0, (xs_c, b_c, c_c, dt_c, dalog_c))
+    y = y.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    return y[:, :s_orig], h_final
+
+
+def ssm_forward(x: jax.Array, prm: Dict, cfg: ModelConfig,
+                h0=None, constrain=lambda t, a: t) -> Tuple[jax.Array, Dict]:
+    """Train/prefill pass. Returns (out [B,S,d], cache)."""
+    din, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    p = cfg.ssm_head_dim
+    z = x @ prm["in_proj"]
+    zg, xbc, dt_raw = _split(z, cfg)
+    xbc = _causal_conv(xbc, prm["conv_w"], prm["conv_b"])
+    xs = xbc[..., :din].reshape(*x.shape[:2], h, p)
+    bmat = xbc[..., din:din + n].astype(jnp.float32)
+    cmat = xbc[..., din + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + prm["dt_bias"])
+    # one resharding into the head-sharded layout the whole chunk scan
+    # uses — otherwise GSPMD re-lays-out (all-to-all) EVERY chunk when
+    # the residual stream is sequence-sharded (§Perf iteration 2)
+    xs = constrain(xs, ("batch", None, "tensor", None))
+    bmat = constrain(bmat, ("batch", None, None))
+    cmat = constrain(cmat, ("batch", None, None))
+    dt = constrain(dt, ("batch", None, "tensor"))
+    # gate lives in the same head-sharded layout as y: the elementwise
+    # gate/norm chain is then collective-free (§Perf iteration 3)
+    zg = constrain(zg, ("batch", None, "tensor"))
+    a = -jnp.exp(prm["a_log"])
+    y, h_final = _ssd_chunks(xs, bmat, cmat, dt, a, cfg, h0)
+    y = y + (prm["d_skip"][None, None, :, None]
+             * xs.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(*x.shape[:2], din).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(zg), prm["norm"], cfg.norm_eps)
+    y = constrain(y, ("batch", None, "tensor"))
+    out = y @ prm["out_proj"]
+    # decode resumes from the final state + the last W-1 *pre-conv* inputs
+    raw_xbc = _split(z, cfg)[1]
+    cache = dict(h=h_final,
+                 conv=jax.lax.dynamic_slice_in_dim(
+                     raw_xbc, z.shape[1] - (cfg.conv_width - 1),
+                     cfg.conv_width - 1, axis=1))
+    return out, cache
+
+
+def ssm_decode_step(x: jax.Array, prm: Dict, cfg: ModelConfig,
+                    cache: Dict) -> Tuple[jax.Array, Dict]:
+    """One-token recurrent step. x [B,1,d]; cache {h [B,H,P,N],
+    conv [B,W-1,C]}."""
+    din, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    p = cfg.ssm_head_dim
+    z = x @ prm["in_proj"]
+    zg, xbc_new, dt_raw = _split(z, cfg)
+    # conv over the stored tail + new sample
+    window = jnp.concatenate([cache["conv"],
+                              xbc_new.astype(cache["conv"].dtype)], axis=1)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                          prm["conv_w"].astype(jnp.float32))
+    xbc = jax.nn.silu(conv_out + prm["conv_b"].astype(jnp.float32))[:, None]
+    xs = xbc[..., :din].reshape(x.shape[0], h, p)
+    bmat = xbc[..., din:din + n][:, 0]                      # [B,N]
+    cmat = xbc[..., din + n:][:, 0]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + prm["dt_bias"])
+    a = -jnp.exp(prm["a_log"])
+    da = jnp.exp(dt * a)                                    # [B,H]
+    h_new = (cache["h"] * da[:, :, None, None]
+             + jnp.einsum("bh,bn,bhp->bhpn", dt, bmat,
+                          xs.astype(jnp.float32)))
+    y = jnp.einsum("bn,bhpn->bhp", cmat, h_new)
+    y = y + prm["d_skip"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(x.shape[0], 1, din).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(zg), prm["norm"], cfg.norm_eps)
+    out = y @ prm["out_proj"]
+    new_conv = window[:, 1:]
+    return out, dict(h=h_new, conv=new_conv)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> Dict:
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return dict(
+        h=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                    jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+    )

@@ -1,0 +1,107 @@
+"""SDE API — JSON request/response schemata (paper Section 3, Figure 1).
+
+All requests are lightweight JSON snippets so cross-(Big Data)-platform
+workflows (anything that can produce/consume JSON) can drive the engine;
+this mirrors the paper's Kafka RequestTopic contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: str
+
+
+@dataclasses.dataclass
+class BuildSynopsis(Request):
+    """Create (or start maintaining) a synopsis on-the-fly.
+
+    stream_id: single-stream synopsis target; None => data-source synopsis.
+    per_stream_of_source: one synopsis per stream of the source with a
+      single request (paper: 'a sample per stock ... single request').
+    """
+    synopsis_id: str = ""
+    kind: str = "countmin"
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    stream_id: Optional[int] = None
+    source_id: Optional[str] = None
+    per_stream_of_source: bool = False
+    n_streams: int = 0                    # hint for per-stream builds
+    parallelism: int = 1                  # requested degree (data-source)
+    scheme: str = "partition"             # partition | round_robin
+    federated: bool = False
+    responsible_site: Optional[str] = None
+    continuous: bool = False              # emit estimate on every update
+
+
+@dataclasses.dataclass
+class StopSynopsis(Request):
+    synopsis_id: str = ""
+
+
+@dataclasses.dataclass
+class LoadSynopsis(Request):
+    """Plug an external synopsis definition while the service runs."""
+    kind_name: str = ""
+    factory_path: str = ""                # "module:callable"
+
+
+@dataclasses.dataclass
+class AdHocQuery(Request):
+    synopsis_id: str = ""
+    query: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class StatusReport(Request):
+    pass
+
+
+@dataclasses.dataclass
+class Response:
+    request_id: str
+    synopsis_id: str = ""
+    ok: bool = True
+    value: Any = None
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    error: str = ""
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), default=_jsonable)
+
+
+def _jsonable(x):
+    try:
+        import numpy as np
+        if isinstance(x, np.ndarray):
+            return x.tolist()
+        if isinstance(x, (np.generic,)):
+            return x.item()
+    except Exception:
+        pass
+    return str(x)
+
+
+_KINDS = {
+    "build": BuildSynopsis,
+    "stop": StopSynopsis,
+    "load": LoadSynopsis,
+    "adhoc": AdHocQuery,
+    "status": StatusReport,
+}
+
+
+def parse_request(snippet: str | Dict[str, Any]) -> Request:
+    """Parse a JSON request snippet into a typed request."""
+    obj = json.loads(snippet) if isinstance(snippet, str) else dict(snippet)
+    rtype = obj.pop("type")
+    cls = _KINDS[rtype]
+    fields = {f.name for f in dataclasses.fields(cls)}
+    unknown = set(obj) - fields
+    if unknown:
+        raise ValueError(f"unknown fields for {rtype!r}: {sorted(unknown)}")
+    return cls(**obj)

@@ -1,0 +1,68 @@
+"""SDEaaS as a cost estimator for workflow placement (paper Section 7,
+"...as a Cost Estimator for Enhanced Horizontal Scalability").
+
+The engine's HLL answers "how many pieces of work" (distinct streams per
+interval) and its CountMin answers "how big is each piece" (per-stream
+frequency). The optimizer then sizes the worker pool and balances load
+with Worst-Fit-Decreasing bin packing — exactly the paper's recipe
+([24]'s WFD), so no worker is overloaded and throughput doesn't collapse
+on skewed streams.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from .engine import SDE
+
+
+@dataclasses.dataclass
+class Placement:
+    assignments: Dict[int, int]          # stream -> worker
+    loads: List[float]                   # per-worker estimated load
+    n_workers: int
+
+    @property
+    def imbalance(self) -> float:
+        """max/mean load ratio (1.0 = perfect)."""
+        mean = max(float(np.mean(self.loads)), 1e-9)
+        return float(np.max(self.loads)) / mean
+
+
+def estimate_workload(sde: SDE, hll_id: str, cm_id: str,
+                      candidate_streams: Sequence[int]):
+    """Query the engine's synopses: (#active streams, per-stream load)."""
+    n_active = float(sde.handle(
+        {"type": "adhoc", "request_id": "wl-n",
+         "synopsis_id": hll_id}).value)
+    freqs = sde.handle(
+        {"type": "adhoc", "request_id": "wl-f", "synopsis_id": cm_id,
+         "query": {"items": [int(s) for s in candidate_streams]}}).value
+    return n_active, np.asarray(freqs, np.float64)
+
+
+def worst_fit_decreasing(stream_ids: Sequence[int],
+                         stream_loads: Sequence[float],
+                         n_workers: int) -> Placement:
+    """WFD bin packing: heaviest piece first, into the least-loaded bin."""
+    order = np.argsort(-np.asarray(stream_loads))
+    loads = [0.0] * n_workers
+    assignments: Dict[int, int] = {}
+    for i in order:
+        w = int(np.argmin(loads))
+        assignments[int(stream_ids[i])] = w
+        loads[w] += float(stream_loads[i])
+    return Placement(assignments=assignments, loads=loads,
+                     n_workers=n_workers)
+
+
+def plan_workers(sde: SDE, hll_id: str, cm_id: str,
+                 candidate_streams: Sequence[int],
+                 capacity_per_worker: float) -> Placement:
+    """Size the pool from the HLL cardinality + CM loads, then pack."""
+    _, loads = estimate_workload(sde, hll_id, cm_id, candidate_streams)
+    total = float(loads.sum())
+    n_workers = max(1, int(np.ceil(total / capacity_per_worker)))
+    return worst_fit_decreasing(candidate_streams, loads, n_workers)

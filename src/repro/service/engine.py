@@ -1,0 +1,447 @@
+"""The SDEaaS engine — one always-on service maintaining thousands of
+synopses for thousands of streams (paper Section 4).
+
+Structure mirrors the paper's architecture, adapted to JAX:
+
+  * blue path  : ``ingest(stream_ids, values)`` — ONE jitted update per
+    synopsis *kind* updates every synopsis of that kind (stacked state =
+    slot sharing). Routing tables (stream -> row) are device int32 arrays,
+    the analogue of RegisterSynopsis/HashData key creation.
+  * red path   : ``handle(request_json)`` — queries read the same state
+    through separate jitted estimate functions; they never enter (or
+    back-pressure) the update path.
+  * yellow path: federated synopses — ``Federation`` keeps one SDE per
+    site and synthesizes global estimates at the responsible site via
+    ``core.federated.merge_tree`` (collective mergeability).
+
+Capacity management: kind stacks grow by doubling (amortized re-jit),
+"a request for a new synopsis assigns new tasks, not task slots".
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import json
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core
+from repro.core import batched, federated
+from repro.core.synopsis import Synopsis, kind_params
+from . import api
+
+_MAX_STREAMS = 1 << 16       # routing-table size (stream-id space)
+
+
+@dataclasses.dataclass
+class _Entry:
+    synopsis_id: str
+    kind_key: Any                 # the frozen kind dataclass
+    row: int
+    stream_id: Optional[int]      # None => data-source synopsis
+    federated: bool = False
+    responsible_site: Optional[str] = None
+    continuous: bool = False
+    source_id: Optional[str] = None
+
+
+class _KindStack:
+    """All synopses of one kind: stacked state + routing table."""
+
+    def __init__(self, kind: Synopsis, capacity: int = 64):
+        self.kind = kind
+        self.capacity = capacity
+        self.state = batched.stacked_init(kind, capacity)
+        self.route = jnp.full((_MAX_STREAMS,), -1, jnp.int32)  # stream->row
+        self.source_rows: List[int] = []   # rows fed by ALL tuples
+        self.used: List[bool] = [False] * capacity
+        self.is_timeseries = hasattr(kind, "step")
+
+    def alloc(self) -> int:
+        for i, u in enumerate(self.used):
+            if not u:
+                self.used[i] = True
+                return i
+        old_cap = self.capacity
+        self.capacity *= 2
+        self.state = batched.grow(self.state, self.capacity)
+        self.used.extend([False] * old_cap)
+        self.used[old_cap] = True
+        return old_cap
+
+    def free(self, row: int):
+        self.used[row] = False
+        self.route = jnp.where(self.route == row, -1, self.route)
+        if row in self.source_rows:
+            self.source_rows.remove(row)
+
+
+class SDE:
+    """One SDEaaS instance (one site/cluster in federated settings)."""
+
+    def __init__(self, site: str = "site-0", backend: str = "xla"):
+        self.site = site
+        self.backend = backend
+        self.stacks: Dict[Any, _KindStack] = {}
+        self.entries: Dict[str, _Entry] = {}
+        self.continuous_out: List[api.Response] = []
+        self.tuples_ingested = 0
+
+    # ------------------------------------------------------------------
+    # red path: requests
+    # ------------------------------------------------------------------
+    def handle(self, snippet: str | dict) -> api.Response:
+        try:
+            req = api.parse_request(snippet)
+            if isinstance(req, api.BuildSynopsis):
+                return self._build(req)
+            if isinstance(req, api.StopSynopsis):
+                return self._stop(req)
+            if isinstance(req, api.LoadSynopsis):
+                return self._load(req)
+            if isinstance(req, api.AdHocQuery):
+                return self._query(req)
+            if isinstance(req, api.StatusReport):
+                return self._status(req)
+            raise ValueError(f"unhandled request {req}")
+        except Exception as e:  # noqa: BLE001 - service returns errors
+            rid = ""
+            try:
+                rid = json.loads(snippet)["request_id"] if isinstance(
+                    snippet, str) else snippet.get("request_id", "")
+            except Exception:
+                pass
+            return api.Response(request_id=rid, ok=False, error=repr(e))
+
+    def _build(self, req: api.BuildSynopsis) -> api.Response:
+        kind = core.make_kind(req.kind, **req.params)
+        stack = self.stacks.get(kind)
+        if stack is None:
+            cap = 64
+            if req.per_stream_of_source and req.n_streams:
+                cap = max(64, 1 << int(np.ceil(np.log2(req.n_streams))))
+            stack = _KindStack(kind, cap)
+            self.stacks[kind] = stack
+
+        def add_one(sid: Optional[int], syn_id: str):
+            # reuse: same id => same synopsis shared across workflows
+            if syn_id in self.entries:
+                return
+            row = stack.alloc()
+            if sid is None:
+                stack.source_rows.append(row)
+            else:
+                stack.route = stack.route.at[sid].set(row)
+            self.entries[syn_id] = _Entry(
+                synopsis_id=syn_id, kind_key=kind, row=row, stream_id=sid,
+                federated=req.federated,
+                responsible_site=req.responsible_site,
+                continuous=req.continuous, source_id=req.source_id)
+
+        if req.per_stream_of_source:
+            for sid in range(req.n_streams):
+                add_one(sid, f"{req.synopsis_id}/{sid}")
+        else:
+            add_one(req.stream_id, req.synopsis_id)
+        return api.Response(request_id=req.request_id,
+                            synopsis_id=req.synopsis_id,
+                            params=kind_params(kind))
+
+    def _stop(self, req: api.StopSynopsis) -> api.Response:
+        ids = [k for k in self.entries
+               if k == req.synopsis_id or k.startswith(req.synopsis_id + "/")]
+        if not ids:
+            return api.Response(request_id=req.request_id, ok=False,
+                                error=f"unknown synopsis {req.synopsis_id!r}")
+        for k in ids:
+            e = self.entries.pop(k)
+            self.stacks[e.kind_key].free(e.row)
+        return api.Response(request_id=req.request_id,
+                            synopsis_id=req.synopsis_id, value=len(ids))
+
+    def _load(self, req: api.LoadSynopsis) -> api.Response:
+        """Dynamic pluggability: import factory while the service runs."""
+        mod_name, _, attr = req.factory_path.partition(":")
+        factory = getattr(importlib.import_module(mod_name), attr)
+        core.register_kind(req.kind_name, factory, overwrite=True)
+        return api.Response(request_id=req.request_id, value=req.kind_name)
+
+    def _query(self, req: api.AdHocQuery) -> api.Response:
+        e = self.entries.get(req.synopsis_id)
+        if e is None:
+            return api.Response(request_id=req.request_id, ok=False,
+                                error=f"unknown synopsis {req.synopsis_id!r}")
+        val = self._estimate_entry(e, req.query)
+        return api.Response(request_id=req.request_id,
+                            synopsis_id=req.synopsis_id, value=val,
+                            params=kind_params(e.kind_key))
+
+    def _status(self, req: api.StatusReport) -> api.Response:
+        info = {
+            sid: dict(kind=type(e.kind_key).__name__,
+                      params=kind_params(e.kind_key),
+                      stream=e.stream_id, federated=e.federated,
+                      memory_bytes=e.kind_key.memory_bytes())
+            for sid, e in self.entries.items()}
+        return api.Response(request_id=req.request_id, value=info)
+
+    # ------------------------------------------------------------------
+    # blue path: data
+    # ------------------------------------------------------------------
+    def ingest(self, stream_ids: np.ndarray, values: np.ndarray,
+               mask: Optional[np.ndarray] = None) -> None:
+        """One batch of (stream, value) tuples; updates EVERY maintained
+        synopsis of every kind with one jitted call per kind stack."""
+        t = len(stream_ids)
+        if mask is None:
+            mask = np.ones(t, bool)
+        self.tuples_ingested += int(mask.sum())
+        sids = jnp.asarray(stream_ids.astype(np.int32))
+        items = jnp.asarray(stream_ids.astype(np.uint32))
+        vals = jnp.asarray(values.astype(np.float32))
+        msk = jnp.asarray(mask)
+        for kind, stack in self.stacks.items():
+            if stack.is_timeseries:
+                self._ingest_timeseries(stack, sids, vals, msk)
+            else:
+                self._ingest_stack(stack, sids, items, vals, msk)
+        self._emit_continuous()
+
+    def _ingest_stack(self, stack: _KindStack, sids, items, vals, msk):
+        syn_idx = stack.route[sids]                     # [-1 => unrouted]
+        routed = msk & (syn_idx >= 0)
+        state = _update(stack.kind, self.backend, stack.state,
+                        jnp.maximum(syn_idx, 0), items, vals, routed)
+        # data-source synopses see every tuple
+        for row in stack.source_rows:
+            state = _update(stack.kind, self.backend, state,
+                            jnp.full_like(syn_idx, row), items, vals, msk)
+        stack.state = state
+
+    def _ingest_timeseries(self, stack: _KindStack, sids, vals, msk):
+        """Time-series kinds (DFT): one tick per stream per batch — the
+        batch is a StatStream 'basic window'; the last value per stream
+        wins (documented resolution reduction)."""
+        syn_idx = stack.route[sids]
+        routed = msk & (syn_idx >= 0)
+        rows = jnp.where(routed, syn_idx, stack.capacity)  # overflow slot
+        per_row = jnp.zeros((stack.capacity + 1,), jnp.float32)
+        per_row = per_row.at[rows].set(vals)               # last write wins
+        hit = jnp.zeros((stack.capacity + 1,), bool).at[rows].set(routed)
+        stack.state = _step_all(stack.kind, stack.state,
+                                per_row[:-1], hit[:-1])
+
+    def _emit_continuous(self):
+        for sid, e in self.entries.items():
+            if e.continuous:
+                self.continuous_out.append(api.Response(
+                    request_id=f"cq/{sid}/{self.tuples_ingested}",
+                    synopsis_id=sid, value=self._estimate_entry(e, {})))
+
+    # ------------------------------------------------------------------
+    def _estimate_entry(self, e: _Entry, query: Dict[str, Any]):
+        stack = self.stacks[e.kind_key]
+        state = batched.stacked_row(stack.state, e.row)
+        return _estimate(e.kind_key, state, query)
+
+    def state_of(self, synopsis_id: str):
+        e = self.entries[synopsis_id]
+        return batched.stacked_row(self.stacks[e.kind_key].state, e.row)
+
+    def memory_bytes(self) -> int:
+        return sum(
+            x.size * x.dtype.itemsize
+            for s in self.stacks.values() for x in jax.tree.leaves(s.state))
+
+    # ------------------------------------------------------------------
+    # fault tolerance + elasticity
+    # ------------------------------------------------------------------
+    def snapshot(self, directory: str, step: int = 0) -> None:
+        """Atomic engine checkpoint (state + routing + registry)."""
+        from repro.core.synopsis import name_of_kind
+        from repro.training import checkpoint as ckpt
+        kinds = list(self.stacks)
+        arrays = {f"stack{i}": dict(state=self.stacks[k].state,
+                                    route=self.stacks[k].route)
+                  for i, k in enumerate(kinds)}
+        manifest = dict(
+            site=self.site, backend=self.backend,
+            tuples_ingested=self.tuples_ingested,
+            stacks=[dict(kind=name_of_kind(k),
+                         params=_json_params(kind_params(k)),
+                         capacity=self.stacks[k].capacity,
+                         used=self.stacks[k].used,
+                         source_rows=self.stacks[k].source_rows)
+                    for k in kinds],
+            entries={sid: dict(kind_index=kinds.index(e.kind_key),
+                               row=e.row, stream_id=e.stream_id,
+                               federated=e.federated,
+                               responsible_site=e.responsible_site,
+                               continuous=e.continuous,
+                               source_id=e.source_id)
+                     for sid, e in self.entries.items()},
+        )
+        ckpt.save(arrays, directory, step, extra_manifest=manifest)
+
+    @classmethod
+    def restore(cls, directory: str, step: Optional[int] = None) -> "SDE":
+        """Rebuild a running engine from a snapshot (restart path)."""
+        import repro.core as core_mod
+        from repro.training import checkpoint as ckpt
+        # structure: rebuild kinds first, then load arrays into shape
+        import json as _json
+        import os
+        step_ = step if step is not None else ckpt.latest_step(directory)
+        with open(os.path.join(directory, f"step-{step_:08d}",
+                               "manifest.json")) as f:
+            man = _json.load(f)
+        eng = cls(site=man["site"], backend=man["backend"])
+        eng.tuples_ingested = man["tuples_ingested"]
+        kinds = []
+        like = {}
+        for i, sk in enumerate(man["stacks"]):
+            kind = core_mod.make_kind(sk["kind"], **sk["params"])
+            stack = _KindStack(kind, sk["capacity"])
+            stack.used = list(sk["used"])
+            stack.source_rows = list(sk["source_rows"])
+            eng.stacks[kind] = stack
+            kinds.append(kind)
+            like[f"stack{i}"] = dict(state=stack.state, route=stack.route)
+        arrays, _ = ckpt.restore(like, directory, step_)
+        for i, kind in enumerate(kinds):
+            eng.stacks[kind].state = arrays[f"stack{i}"]["state"]
+            eng.stacks[kind].route = arrays[f"stack{i}"]["route"]
+        for sid, e in man["entries"].items():
+            eng.entries[sid] = _Entry(
+                synopsis_id=sid, kind_key=kinds[e["kind_index"]],
+                row=e["row"], stream_id=e["stream_id"],
+                federated=e["federated"],
+                responsible_site=e["responsible_site"],
+                continuous=e["continuous"], source_id=e["source_id"])
+        return eng
+
+    def merge_from(self, other: "SDE") -> None:
+        """Elastic scale-down: absorb another engine's synopses.
+        Matching synopsis ids merge (mergeability); new ids transfer."""
+        for sid, oe in other.entries.items():
+            o_state = other.state_of(sid)
+            if sid in self.entries:
+                e = self.entries[sid]
+                merged = e.kind_key.merge(self.state_of(sid), o_state)
+                stack = self.stacks[e.kind_key]
+                stack.state = batched.set_row(stack.state, e.row, merged)
+            else:
+                kind = oe.kind_key
+                if kind not in self.stacks:
+                    self.stacks[kind] = _KindStack(kind, 64)
+                stack = self.stacks[kind]
+                row = stack.alloc()
+                stack.state = batched.set_row(stack.state, row, o_state)
+                if oe.stream_id is None:
+                    stack.source_rows.append(row)
+                else:
+                    stack.route = stack.route.at[oe.stream_id].set(row)
+                self.entries[sid] = dataclasses.replace(oe, row=row)
+        self.tuples_ingested += other.tuples_ingested
+
+
+def _json_params(params):
+    return {k: v for k, v in params.items()
+            if isinstance(v, (int, float, str, bool))}
+
+
+# ---------------------------------------------------------------------------
+# jitted update/estimate dispatch (cached per (kind, backend, shapes))
+# ---------------------------------------------------------------------------
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def _update_fn(kind, backend: str):
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        if isinstance(kind, core.CountMin):
+            seeds = kind._seeds()
+            return jax.jit(lambda st, syn, it, v, m: kops.countmin_update(
+                st, syn, it, v, m, seeds=seeds, log2_width=kind.log2_width,
+                weighted=kind.weighted))
+        if isinstance(kind, core.AMS):
+            seeds = kind._seeds()
+            return jax.jit(lambda st, syn, it, v, m: kops.ams_update(
+                st, syn, it, v, m, seeds=seeds, log2_width=kind.log2_width))
+        if isinstance(kind, core.HyperLogLog):
+            return jax.jit(lambda st, syn, it, v, m: kops.hll_update(
+                st, syn, it, m, seed=kind.seed, p=kind.p))
+        # no kernel for this kind: fall through to XLA path
+    return jax.jit(functools.partial(batched.stacked_add_batch, kind))
+
+
+def _update(kind, backend, state, syn_idx, items, vals, mask):
+    return _update_fn(kind, backend)(state, syn_idx, items, vals, mask)
+
+
+@functools.lru_cache(maxsize=None)
+def _step_fn(kind):
+    return jax.jit(functools.partial(batched.stacked_step, kind))
+
+
+def _step_all(kind, state, vals, mask):
+    return _step_fn(kind)(state, vals, mask)
+
+
+def _estimate(kind, state, query: Dict[str, Any]):
+    q = dict(query)
+    if isinstance(kind, (core.CountMin, core.LossyCounting,
+                         core.StickySampling)):
+        items = jnp.asarray(np.asarray(q.get("items", [0]), np.uint32))
+        return np.asarray(kind.estimate(state, items))
+    if isinstance(kind, core.BloomFilter):
+        items = jnp.asarray(np.asarray(q.get("items", [0]), np.uint32))
+        return np.asarray(kind.estimate(state, items))
+    if isinstance(kind, core.GKQuantiles):
+        qs = jnp.asarray(np.asarray(q.get("qs", [0.5]), np.float32))
+        return np.asarray(kind.estimate(state, qs))
+    out = kind.estimate(state)
+    return jax.tree.map(np.asarray, out)
+
+
+# ---------------------------------------------------------------------------
+# Federation (yellow path): one SDE per geo-dispersed site
+# ---------------------------------------------------------------------------
+class Federation:
+    """Simulates the paper's multi-cluster deployment: each site runs its
+    own SDE; federated queries are merged at the responsible site. The
+    bytes shipped per estimate are exactly the synopsis state size —
+    reported by ``query_bytes`` (fig 5d)."""
+
+    def __init__(self, sites: List[str], backend: str = "xla"):
+        self.sdes = {s: SDE(site=s, backend=backend) for s in sites}
+
+    def broadcast(self, snippet: str | dict) -> Dict[str, api.Response]:
+        return {s: sde.handle(snippet) for s, sde in self.sdes.items()}
+
+    def query_federated(self, synopsis_id: str, query: Dict[str, Any],
+                        responsible: str):
+        """Case 2/3: ship partial synopses to the responsible site, merge
+        (mergeability), estimate once."""
+        states, kind = [], None
+        for sde in self.sdes.values():
+            if synopsis_id in sde.entries:
+                kind = sde.entries[synopsis_id].kind_key
+                states.append(sde.state_of(synopsis_id))
+        if kind is None:
+            raise KeyError(synopsis_id)
+        merged = federated.merge_tree(kind, states)
+        return _estimate(kind, merged, query)
+
+    def query_bytes(self, synopsis_id: str) -> int:
+        total = 0
+        for sde in self.sdes.values():
+            if synopsis_id in sde.entries:
+                total += federated.communication_bytes(
+                    sde.entries[synopsis_id].kind_key,
+                    sde.state_of(synopsis_id))
+        return total

@@ -1,0 +1,1 @@
+from .specs import MeshRules, DEFAULT_RULES, spec_for, constrainer, shard_params_spec  # noqa: F401

@@ -1,0 +1,102 @@
+"""Logical-axis -> mesh-axis sharding rule system (MaxText-style).
+
+Every tensor in the model is annotated with logical axis names; the rules
+map them onto physical mesh axes:
+
+  batch    -> ("pod", "data")   data parallel (+ pod DP across pods)
+  fsdp     -> "data"            parameter/optimizer-state sharding (ZeRO-3)
+  tensor   -> "model"           tensor parallel (heads / d_ff / vocab)
+  expert   -> "model" | None    expert parallel (per-arch: arctic yes,
+                                grok no — 8 experts don't divide 16)
+  seq      -> "model" | None    sequence/context parallel for activations
+                                and seq-sharded KV caches
+
+Rules compose per-architecture via ModelConfig flags; unknown / None
+logical names map to replicated dims. When a logical dim does not divide
+its mesh axis the rule degrades to replicated (recorded by callers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    batch: Tuple[str, ...] = ("pod", "data")
+    fsdp: Optional[str] = "data"
+    tensor: Optional[str] = "model"
+    expert: Optional[str] = "model"
+    seq: Optional[str] = None          # activations seq axis (SP)
+    kv_seq: Optional[str] = "model"    # decode cache seq axis
+
+    def resolve(self, logical: Optional[str], mesh: Mesh):
+        if logical is None:
+            return None
+        axes = getattr(self, logical, None) if logical != "batch" else None
+        if logical == "batch":
+            present = tuple(a for a in self.batch if a in mesh.axis_names)
+            return present if present else None
+        if axes is None:
+            return None
+        return axes if axes in mesh.axis_names else None
+
+
+DEFAULT_RULES = MeshRules()
+
+
+def spec_for(rules: MeshRules, logical_axes: Tuple[Optional[str], ...],
+             mesh: Mesh, dim_sizes: Tuple[int, ...] = ()) -> P:
+    """PartitionSpec from logical axis names; degrades to replicated when
+    the dim does not divide the mesh axis."""
+    parts = []
+    for i, name in enumerate(logical_axes):
+        ax = rules.resolve(name, mesh)
+        if ax is not None and dim_sizes:
+            size = dim_sizes[i]
+            if isinstance(ax, tuple):
+                # degrade to the longest divisible prefix of the axes
+                while ax and size % np_prod(
+                        [mesh.shape[a] for a in ax]) != 0:
+                    ax = ax[:-1]
+                ax = ax or None
+            elif size % mesh.shape[ax] != 0:
+                ax = None
+        parts.append(ax)
+    return P(*parts)
+
+
+def np_prod(xs):
+    out = 1
+    for x in xs:
+        out *= x
+    return out
+
+
+def sharding_for(rules: MeshRules, logical_axes, mesh: Mesh,
+                 dim_sizes=()) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(rules, logical_axes, mesh, dim_sizes))
+
+
+def constrainer(rules: MeshRules, mesh: Mesh):
+    """Returns constrain(tensor, logical_axes) used inside model code."""
+    def constrain(t: jax.Array, logical_axes: Tuple[Optional[str], ...]):
+        if mesh.empty:
+            return t
+        spec = spec_for(rules, logical_axes, mesh, t.shape)
+        return jax.lax.with_sharding_constraint(t, NamedSharding(mesh, spec))
+    return constrain
+
+
+def shard_params_spec(logical_tree, rules: MeshRules, mesh: Mesh,
+                      shape_tree):
+    """Map a pytree of logical-axis tuples (+ matching shapes) to
+    NamedShardings."""
+    return jax.tree.map(
+        lambda axes, shp: sharding_for(rules, axes, mesh, shp.shape),
+        logical_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))

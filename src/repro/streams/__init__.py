@@ -1,0 +1,4 @@
+from .stocks import StockStream
+from .tokens import TokenPipeline
+
+__all__ = ["StockStream", "TokenPipeline"]

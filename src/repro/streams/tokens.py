@@ -1,0 +1,73 @@
+"""Sharded, resumable LM token pipeline with SDE-backed statistics.
+
+Synthetic zipf-mixture corpus (deterministic in (seed, shard, step)), the
+substrate for train examples and smoke tests. Maintains the paper's "cost
+estimator" synopses over the token stream — CountMin (token frequency) and
+HLL (distinct tokens) per shard, mergeable across hosts — which the
+launcher reports for load-balance decisions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import CountMin, HyperLogLog
+
+
+@dataclasses.dataclass
+class TokenPipeline:
+    vocab: int
+    seq_len: int
+    batch: int                    # per-shard batch
+    shard: int = 0
+    n_shards: int = 1
+    seed: int = 0
+    step: int = 0                 # resumable
+    with_stats: bool = True
+
+    def __post_init__(self):
+        if self.with_stats:
+            self.cm = CountMin(eps=0.001, delta=0.01, weighted=False)
+            self.hll = HyperLogLog(rse=0.02)
+            self.cm_state = self.cm.init(None)
+            self.hll_state = self.hll.init(None)
+            self._update = jax.jit(self._stats_update)
+
+    def _stats_update(self, cm_state, hll_state, toks):
+        flat = toks.reshape(-1).astype(jnp.uint32)
+        ones = jnp.ones_like(flat, jnp.float32)
+        mask = jnp.ones_like(flat, bool)
+        return (self.cm.add_batch(cm_state, flat, ones, mask),
+                self.hll.add_batch(hll_state, flat, ones, mask))
+
+    def next_batch(self) -> Dict[str, np.ndarray]:
+        rng = np.random.RandomState(
+            (self.seed * 1_000_003 + self.shard * 7919 + self.step)
+            % (2**31 - 1))
+        toks = (rng.zipf(1.3, size=(self.batch, self.seq_len + 1))
+                % self.vocab).astype(np.int32)
+        self.step += 1
+        batch = dict(tokens=toks[:, :-1], labels=toks[:, 1:])
+        if self.with_stats:
+            self.cm_state, self.hll_state = self._update(
+                self.cm_state, self.hll_state, jnp.asarray(batch["tokens"]))
+        return batch
+
+    # -- SDE statistics (cost-estimator role) ---------------------------
+    def token_frequency(self, token_ids) -> np.ndarray:
+        return np.asarray(self.cm.estimate(
+            self.cm_state, jnp.asarray(np.asarray(token_ids, np.uint32))))
+
+    def distinct_tokens(self) -> float:
+        return float(self.hll.estimate(self.hll_state))
+
+    def state(self) -> Dict:
+        return dict(seed=self.seed, shard=self.shard, step=self.step)
+
+    def restore(self, state: Dict):
+        assert state["shard"] == self.shard
+        self.seed, self.step = state["seed"], state["step"]

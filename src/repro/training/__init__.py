@@ -1,0 +1,4 @@
+from . import optim, train_step, checkpoint, monitor  # noqa: F401
+from .optim import OptConfig
+from .train_step import make_train_step, init_train_state, TrainHooks
+from .monitor import MetricMonitor

@@ -1,0 +1,62 @@
+"""SDE-backed training telemetry (the paper serving an ML workflow).
+
+Host-side monitor that feeds per-step scalar metrics (loss, grad-norm,
+per-layer/per-expert loads) into sliding-DFT synopses and reports
+correlated metric groups via grid bucketing — StatStream pointed at
+training dynamics. Detects e.g. experts whose load curves are highly
+correlated (candidates for merging) or layers with synchronized gradient
+spikes, at O(F) state per metric instead of storing full histories.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DFT
+from repro.core.dft import pairwise_corr
+
+
+class MetricMonitor:
+    def __init__(self, window: int = 64, n_coeffs: int = 8,
+                 threshold: float = 0.9):
+        self.kind = DFT(window=window, n_coeffs=n_coeffs,
+                        threshold=threshold)
+        self.states: Dict[str, dict] = {}
+        self._step = jax.jit(self.kind.step)
+
+    def observe(self, metrics: Dict[str, float]):
+        for name, value in metrics.items():
+            if name not in self.states:
+                self.states[name] = self.kind.init(None)
+            self.states[name] = self._step(self.states[name],
+                                           float(value), True)
+
+    def correlated_groups(self) -> List[List[str]]:
+        """Metric names whose recent windows are correlated above the
+        threshold (same/adjacent DFT grid buckets + corr check)."""
+        names = sorted(self.states)
+        if len(names) < 2:
+            return []
+        coeffs = jnp.stack([self.kind.normalized_coeffs(self.states[n])
+                            for n in names])
+        corr = np.asarray(pairwise_corr(coeffs))
+        groups, used = [], set()
+        for i, ni in enumerate(names):
+            if ni in used:
+                continue
+            group = [ni]
+            for j in range(i + 1, len(names)):
+                if corr[i, j] >= self.kind.threshold and names[j] not in used:
+                    group.append(names[j])
+                    used.add(names[j])
+            if len(group) > 1:
+                groups.append(group)
+                used.update(group)
+        return groups
+
+    def snapshot(self) -> Dict[str, np.ndarray]:
+        return {n: np.asarray(self.kind.normalized_coeffs(s))
+                for n, s in self.states.items()}

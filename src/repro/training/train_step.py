@@ -1,0 +1,136 @@
+"""The jitted train step: loss/grad (remat'd scan blocks), optional
+gradient accumulation, global-norm clipping, AdamW update, and the SDE
+hook — an AMS gradient sketch maintained INSIDE the step.
+
+The sketch is the paper's technique running as a first-class citizen of
+the training loop: a strided sample of every gradient leaf is folded into
+one AMS sketch per step. Because gradients under pjit are already global,
+the sketch is identical on every device (zero extra collectives); across
+pods it is mergeable by construction (linear sketch -> psum), which is the
+paper's federated path. Downstream, monitor.py reads L2-norm estimates and
+per-leaf inner products from it at O(depth*width) memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import AMS
+from repro.models import model as M
+from . import optim
+
+_SKETCH_SAMPLE = 4096      # sampled positions per gradient leaf
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHooks:
+    grad_sketch: Optional[AMS] = AMS(eps=0.02, delta=0.05)
+    sketch_enabled: bool = True
+
+
+def init_train_state(cfg: ModelConfig, opt_cfg: optim.OptConfig,
+                     key: jax.Array, hooks: TrainHooks = TrainHooks()):
+    params = M.init_params(cfg, key)
+    state = dict(
+        params=params,
+        opt=optim.init_opt_state(opt_cfg, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+    if hooks.sketch_enabled and hooks.grad_sketch is not None:
+        state["grad_sketch"] = hooks.grad_sketch.init(None)
+    return state
+
+
+def _strided_sample(g: jax.Array, target: int) -> jax.Array:
+    """Small strided sub-block spanning the tensor (never flattens the
+    full leaf — expert grads can exceed int32 addressing)."""
+    ndim = max(g.ndim, 1)
+    per_dim = max(2, int(round(target ** (1.0 / ndim))))
+    starts = [0] * g.ndim
+    limits = list(g.shape)
+    strides = [max(1, s // per_dim) for s in g.shape]
+    block = jax.lax.slice(g, starts, limits, strides)
+    return block.reshape(-1).astype(jnp.float32)
+
+
+def _sketch_grads(sketch: AMS, sk_state: jax.Array, grads: Any) -> jax.Array:
+    """Fold a strided sample of every grad leaf into the AMS sketch.
+    Item ids = hash(leaf_index, position) so leaves don't collide."""
+    leaves = jax.tree.leaves(grads)
+    for li, g in enumerate(leaves):
+        n = float(np.prod(g.shape)) if g.ndim else 1.0
+        vals = _strided_sample(g, _SKETCH_SAMPLE)
+        take = vals.shape[0]
+        vals = vals * np.sqrt(n / take)        # unbiased L2 scaling
+        items = (jnp.arange(take, dtype=jnp.uint32)
+                 ^ jnp.uint32((li * 2654435761 + 12345) % (2**32)))
+        sk_state = sketch.add_batch(
+            sk_state, items, vals, jnp.ones((take,), bool))
+    return sk_state
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: optim.OptConfig,
+                    constrain=lambda t, a: t, grad_accum: int = 1,
+                    hooks: TrainHooks = TrainHooks(),
+                    spmd=None) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, mb):
+        return M.loss_fn(cfg, params, mb, constrain, spmd=spmd)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def micro(carry, mb):
+                acc, lsum = carry
+                (l, met), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, lsum + l), met
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, lsum), mets = jax.lax.scan(micro, (zero, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = lsum / grad_accum
+            metrics = jax.tree.map(lambda m: m[-1], mets)
+
+        new_params, new_opt, opt_metrics = optim.apply_updates(
+            opt_cfg, params, grads, state["opt"])
+        new_state = dict(params=new_params, opt=new_opt,
+                         step=state["step"] + 1)
+        if "grad_sketch" in state:
+            new_state["grad_sketch"] = _sketch_grads(
+                hooks.grad_sketch, state["grad_sketch"], grads)
+        metrics = dict(loss=loss, **metrics, **opt_metrics)
+        if "grad_sketch" in new_state:
+            metrics["sketch_l2_est"] = hooks.grad_sketch.estimate(
+                new_state["grad_sketch"])
+        return new_state, metrics
+
+    return train_step
+
+
+def state_logical_axes(cfg: ModelConfig, opt_cfg: optim.OptConfig,
+                       hooks: TrainHooks = TrainHooks()) -> Dict[str, Any]:
+    p_axes = M.logical_axes(cfg)
+    out = dict(
+        params=p_axes,
+        opt=optim.opt_state_logical_axes(opt_cfg, p_axes),
+        step=(),
+    )
+    if hooks.sketch_enabled and hooks.grad_sketch is not None:
+        out["grad_sketch"] = (None, None)     # replicated (tiny)
+    return out

@@ -1,0 +1,113 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode on CPU) vs the
+pure-jnp oracles in kernels/ref.py."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+from repro.core import hashing
+
+
+@pytest.mark.parametrize("t,n,d,log2w", [
+    (64, 1, 3, 8), (700, 20, 4, 9), (1024, 128, 5, 10), (333, 7, 2, 7),
+])
+def test_countmin_kernel_sweep(t, n, d, log2w):
+    rng = np.random.RandomState(t + n)
+    seeds = jnp.asarray(hashing.row_seeds(7, d))
+    counts = jnp.asarray(rng.rand(n, d, 1 << log2w).astype(np.float32))
+    syn = rng.randint(0, n, t).astype(np.int32)
+    items = rng.randint(0, 100000, t).astype(np.uint32)
+    vals = rng.randn(t).astype(np.float32)
+    mask = rng.rand(t) > 0.2
+    out_k = ops.countmin_update(counts, syn, items, vals, mask,
+                                seeds=seeds, log2_width=log2w)
+    idx = hashing.bucket_hash(jnp.asarray(items), seeds, log2w)
+    v = jnp.asarray(vals * mask)
+    out_r = ref.onehot_scatter_add(counts, jnp.asarray(syn), idx, v,
+                                   jnp.ones((t, d), jnp.float32))
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("t,n,d,log2w", [(256, 4, 5, 8), (900, 33, 3, 9)])
+def test_ams_kernel_sweep(t, n, d, log2w):
+    rng = np.random.RandomState(t)
+    seeds = jnp.asarray(hashing.row_seeds(13, d))
+    counts = jnp.zeros((n, d, 1 << log2w), jnp.float32)
+    syn = rng.randint(0, n, t).astype(np.int32)
+    items = rng.randint(0, 100000, t).astype(np.uint32)
+    vals = rng.randn(t).astype(np.float32)
+    mask = rng.rand(t) > 0.1
+    out_k = ops.ams_update(counts, syn, items, vals, mask, seeds=seeds,
+                           log2_width=log2w)
+    idx = hashing.bucket_hash(jnp.asarray(items), seeds, log2w)
+    sgn = hashing.sign_hash(jnp.asarray(items), seeds)
+    out_r = ref.onehot_scatter_add(counts, jnp.asarray(syn), idx,
+                                   jnp.asarray(vals * mask), sgn)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("t,n,p", [(128, 1, 8), (513, 16, 10), (900, 5, 6)])
+def test_hll_kernel_sweep(t, n, p):
+    rng = np.random.RandomState(p)
+    regs = jnp.asarray(rng.randint(0, 5, (n, 1 << p)).astype(np.int32))
+    syn = rng.randint(0, n, t).astype(np.int32)
+    items = rng.randint(0, 10**6, t).astype(np.uint32)
+    mask = rng.rand(t) > 0.3
+    out_k = ops.hll_update(regs, syn, items, mask, seed=11, p=p)
+    h = hashing.hash_u32(jnp.asarray(items), 11)
+    bucket = (h >> np.uint32(32 - p)).astype(jnp.int32)
+    rest = (h << np.uint32(p)).astype(jnp.uint32)
+    rank = jnp.where(rest == 0, 32 - p + 1, hashing.clz32(rest) + 1)
+    rank = jnp.where(jnp.asarray(mask), rank, 0).astype(jnp.int32)
+    out_r = ref.hll_max_update(regs, jnp.asarray(syn), bucket, rank)
+    assert (np.asarray(out_k) == np.asarray(out_r)).all()
+
+
+@pytest.mark.parametrize("s,f", [(100, 8), (512, 16), (1111, 4)])
+def test_dft_kernel_sweep(s, f):
+    rng = np.random.RandomState(s)
+    re = rng.randn(s, f).astype(np.float32)
+    im = rng.randn(s, f).astype(np.float32)
+    delta = rng.randn(s).astype(np.float32)
+    mask = (rng.rand(s) > 0.2).astype(np.float32)
+    ang = 2 * np.pi * np.arange(1, f + 1) / 64
+    twr = np.cos(ang).astype(np.float32)
+    twi = np.sin(ang).astype(np.float32)
+    kr, ki = ops.dft_step(*map(jnp.asarray, (re, im, delta, mask, twr, twi)))
+    rr, ri = ref.sliding_dft_step(*map(jnp.asarray,
+                                       (re, im, delta, mask, twr, twi)))
+    np.testing.assert_allclose(np.asarray(kr), np.asarray(rr), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ki), np.asarray(ri), atol=1e-5)
+
+
+@pytest.mark.parametrize("bh,s,d,bq,bk,causal,dtype", [
+    (2, 256, 64, 128, 128, True, jnp.float32),
+    (4, 128, 128, 64, 128, True, jnp.float32),
+    (2, 200, 64, 128, 128, True, jnp.float32),    # padded seq
+    (2, 256, 64, 128, 128, False, jnp.float32),
+    (2, 256, 64, 128, 128, True, jnp.bfloat16),
+])
+def test_flash_attention_sweep(bh, s, d, bq, bk, causal, dtype):
+    rng = np.random.RandomState(s + d)
+    q = jnp.asarray(rng.randn(bh, s, d).astype(np.float32) * 0.3, dtype)
+    k = jnp.asarray(rng.randn(bh, s, d).astype(np.float32) * 0.3, dtype)
+    v = jnp.asarray(rng.randn(bh, s, d).astype(np.float32), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk)
+    want = ref.flash_attention(q, k, v, causal=causal)
+    a = np.asarray(out, np.float32)
+    b = np.asarray(want, np.float32)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    assert np.abs(a - b).max() / (np.abs(b).max() + 1e-9) < tol
+
+
+@pytest.mark.parametrize("n,k", [(64, 16), (300, 16), (512, 40)])
+def test_corr_kernel_sweep(n, k):
+    rng = np.random.RandomState(n)
+    x = (rng.randn(n, k) * 0.1).astype(np.float32)
+    out_k = ops.corr_matrix(jnp.asarray(x))
+    out_r = ref.pairwise_corr(jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,97 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, output shapes + no NaNs; decode consistency for the serving path."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, SHAPES, reduced
+from repro.models import model as M
+from repro.training import OptConfig, init_train_state, make_train_step
+
+ALL_ARCHS = list(ARCHS)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = reduced(ARCHS[arch])
+    key = jax.random.PRNGKey(0)
+    B, S = 2, 32
+    if cfg.frontend == "embeds":
+        batch = dict(embeds=jnp.ones((B, S, cfg.d_model), jnp.bfloat16),
+                     labels=jnp.ones((B, S), jnp.int32))
+    else:
+        batch = dict(tokens=jnp.zeros((B, S), jnp.int32),
+                     labels=jnp.ones((B, S), jnp.int32))
+    params = M.init_params(cfg, key)
+    logits, _, aux = M.forward(cfg, params, batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+    opt = OptConfig(lr=1e-3, warmup_steps=2, total_steps=10)
+    state = init_train_state(cfg, opt, key)
+    step = jax.jit(make_train_step(cfg, opt))
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(state["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "mamba2-2.7b",
+                                  "jamba-v0.1-52b"])
+def test_decode_matches_forward(arch):
+    cfg = reduced(ARCHS[arch], remat=False, capacity_factor=8.0)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 32
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0,
+                              cfg.vocab)
+    full, _, _ = M.forward(cfg, params, dict(tokens=toks))
+    _, caches, _ = M.forward(cfg, params, dict(tokens=toks[:, :S]),
+                             want_caches=True)
+    s_max = 64
+    serve = M.init_caches(cfg, B, s_max)
+    new_serve = {}
+    for kname, v in serve.items():
+        pc = caches[kname]
+        if "k" in pc:
+            def put(sc, c):
+                pad = [(0, 0)] * c.ndim
+                pad[2] = (0, s_max - c.shape[2])
+                return jnp.pad(c, pad)
+            new_serve[kname] = dict(k=put(v["k"], pc["k"]),
+                                    v=put(v["v"], pc["v"]))
+        else:
+            new_serve[kname] = pc
+    logits_d, _ = M.decode_step_fn(cfg, params, new_serve, toks[:, S],
+                                   jnp.int32(S))
+    a = np.asarray(full[:, S, :], np.float32)
+    b = np.asarray(logits_d, np.float32)
+    rel = np.abs(a - b).max() / (np.abs(a).max() + 1e-9)
+    assert rel < 0.05, f"decode diverges from forward: {rel}"
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_param_count_close_to_label(arch):
+    cfg = ARCHS[arch]
+    n = cfg.param_count() / 1e9
+    label = dict(
+        **{"chameleon-34b": 34, "jamba-v0.1-52b": 52, "musicgen-large": 3.3,
+           "grok-1-314b": 314, "arctic-480b": 480, "stablelm-3b": 2.8,
+           "qwen2-0.5b": 0.5, "gemma-7b": 8.5, "qwen2-72b": 72,
+           "mamba2-2.7b": 2.7})[arch]
+    assert abs(n - label) / label < 0.35, f"{arch}: {n:.1f}B vs ~{label}B"
+
+
+def test_input_specs_cover_all_cells():
+    for arch, cfg in ARCHS.items():
+        for shape in SHAPES.values():
+            specs = M.input_specs(cfg, shape)
+            assert specs, (arch, shape.name)
+            for v in specs.values():
+                assert isinstance(v, jax.ShapeDtypeStruct)
+
+
+def test_long_500k_skip_rule():
+    from repro.launch.dryrun import runnable
+    n_run = sum(1 for cfg in ARCHS.values()
+                if runnable(cfg, SHAPES["long_500k"]) is None)
+    assert n_run == 2          # jamba + mamba2 only

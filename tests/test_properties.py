@@ -1,0 +1,128 @@
+"""Hypothesis property tests on the system's invariants.
+
+The central invariant from the paper (mergeability, [11]):
+    estimate(merge(sketch(A), sketch(B))) ~= estimate(sketch(A ++ B))
+plus structural properties: CM one-sided error, Bloom no-false-negatives,
+HLL monotonicity, window conservation.
+"""
+import numpy as np
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro import core
+
+_settings = dict(deadline=None, max_examples=20,
+                 suppress_health_check=[HealthCheck.too_slow,
+                                        HealthCheck.data_too_large])
+
+streams = st.lists(st.integers(0, 500), min_size=1, max_size=400)
+
+
+def _feed(kind, items):
+    items = np.asarray(items, np.uint32)
+    return jax.jit(kind.add_batch)(
+        kind.init(None), items, np.ones(len(items), np.float32),
+        np.ones(len(items), bool))
+
+
+@given(a=streams, b=streams)
+@settings(**_settings)
+def test_cm_merge_equals_concat(a, b):
+    cm = core.CountMin(eps=0.02, delta=0.1)
+    merged = cm.merge(_feed(cm, a), _feed(cm, b))
+    both = _feed(cm, a + b)
+    q = np.asarray(sorted(set(a + b))[:16], np.uint32)
+    np.testing.assert_allclose(np.asarray(cm.estimate(merged, q)),
+                               np.asarray(cm.estimate(both, q)), rtol=1e-5)
+
+
+@given(a=streams, b=streams)
+@settings(**_settings)
+def test_hll_merge_equals_concat(a, b):
+    h = core.HyperLogLog(rse=0.05)
+    merged = h.merge(_feed(h, a), _feed(h, b))
+    both = _feed(h, a + b)
+    assert float(h.estimate(merged)) == pytest.approx(
+        float(h.estimate(both)), rel=1e-6)
+
+
+@given(a=streams, b=streams)
+@settings(**_settings)
+def test_fm_merge_commutative(a, b):
+    fm = core.FMSketch(nmaps=32)
+    m1 = fm.merge(_feed(fm, a), _feed(fm, b))
+    m2 = fm.merge(_feed(fm, b), _feed(fm, a))
+    assert float(fm.estimate(m1)) == float(fm.estimate(m2))
+
+
+@given(items=streams)
+@settings(**_settings)
+def test_cm_never_underestimates(items):
+    cm = core.CountMin(eps=0.05, delta=0.2)
+    state = _feed(cm, items)
+    q = np.asarray(sorted(set(items))[:16], np.uint32)
+    est = np.asarray(cm.estimate(state, q))
+    true = np.asarray([items.count(i) for i in q.tolist()], np.float32)
+    assert (est >= true - 1e-4).all()
+
+
+@given(items=streams)
+@settings(**_settings)
+def test_bloom_no_false_negatives(items):
+    bl = core.BloomFilter(n_elements=500, fpr=0.05)
+    state = _feed(bl, items)
+    q = np.asarray(sorted(set(items)), np.uint32)
+    assert bool(np.asarray(bl.estimate(state, q)).all())
+
+
+@given(a=streams, b=streams)
+@settings(**_settings)
+def test_hll_monotone_under_union(a, b):
+    h = core.HyperLogLog(rse=0.05)
+    sa = _feed(h, a)
+    merged = h.merge(sa, _feed(h, b))
+    assert float(h.estimate(merged)) >= float(h.estimate(sa)) - 1e-6
+
+
+@given(a=streams, b=streams)
+@settings(**_settings)
+def test_ams_merge_linear(a, b):
+    ams = core.AMS(eps=0.1, delta=0.1)
+    merged = ams.merge(_feed(ams, a), _feed(ams, b))
+    both = _feed(ams, a + b)
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(both),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(items=st.lists(st.floats(-100, 100, allow_nan=False,
+                                width=32), min_size=8, max_size=300))
+@settings(**_settings)
+def test_gk_rank_bounded(items):
+    gk = core.GKQuantiles(eps=0.05)
+    arr = np.asarray(items, np.float32)
+    state = jax.jit(gk.add_batch)(gk.init(None),
+                                  np.zeros(len(arr), np.uint32), arr,
+                                  np.ones(len(arr), bool))
+    med = float(gk.estimate(state, np.array([0.5], np.float32))[0])
+    tol = 6 * gk.eps + 1.0 / len(arr)
+    # tie-safe rank bracket: strict rank below, weak rank above the target
+    assert (arr < med).mean() <= 0.5 + tol
+    assert (arr <= med).mean() >= 0.5 - tol
+
+
+@given(n_a=st.integers(32, 300), n_b=st.integers(32, 300))
+@settings(**_settings)
+def test_reservoir_merge_count(n_a, n_b):
+    """Merging two warm reservoirs keeps the union count and a full,
+    well-sourced sample (items come from either input stream)."""
+    rs = core.ReservoirSampler(sample_size=32)
+    a = _feed(rs, list(range(n_a)))
+    b = _feed(rs, list(range(1000, 1000 + n_b)))
+    merged = rs.merge(a, b)
+    assert int(merged["n_seen"]) == n_a + n_b
+    out = rs.estimate(merged)
+    assert int(np.asarray(out["valid"]).sum()) == 32
+    sample = np.asarray(out["items"])
+    assert (((sample < n_a) | ((sample >= 1000) & (sample < 1000 + n_b)))
+            .all())

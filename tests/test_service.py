@@ -1,0 +1,200 @@
+"""SDEaaS service behaviour: the paper's API contract (Section 3)."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.service import SDE, Federation
+from repro.service.planner import Planner, WorkflowSpec
+from repro import core
+
+
+@pytest.fixture
+def sde():
+    eng = SDE()
+    r = eng.handle({"type": "build", "request_id": "b1",
+                    "synopsis_id": "cm", "kind": "countmin",
+                    "params": {"eps": 0.01, "delta": 0.05,
+                               "weighted": False},
+                    "per_stream_of_source": True, "n_streams": 50})
+    assert r.ok, r.error
+    r = eng.handle({"type": "build", "request_id": "b2",
+                    "synopsis_id": "hll", "kind": "hyperloglog",
+                    "params": {"rse": 0.03}})
+    assert r.ok, r.error
+    rng = np.random.RandomState(0)
+    for _ in range(20):
+        sids = rng.randint(0, 50, 256).astype(np.uint32)
+        eng.ingest(sids, np.ones(256, np.float32))
+    return eng
+
+
+def test_adhoc_query(sde):
+    q = sde.handle({"type": "adhoc", "request_id": "q", "synopsis_id":
+                    "cm/7", "query": {"items": [7]}})
+    assert q.ok
+    # ~20*256/50 tuples per stream
+    assert 50 < float(q.value[0]) < 160
+
+
+def test_data_source_synopsis(sde):
+    q = sde.handle({"type": "adhoc", "request_id": "q2",
+                    "synopsis_id": "hll"})
+    assert abs(float(q.value) - 50) < 10
+
+
+def test_status_and_reuse(sde):
+    st = sde.handle({"type": "status", "request_id": "s"})
+    assert len(st.value) == 51
+    # re-building the same synopsis id reuses it (no duplication)
+    sde.handle({"type": "build", "request_id": "b3", "synopsis_id": "hll",
+                "kind": "hyperloglog", "params": {"rse": 0.03}})
+    st2 = sde.handle({"type": "status", "request_id": "s2"})
+    assert len(st2.value) == 51
+
+
+def test_stop(sde):
+    r = sde.handle({"type": "stop", "request_id": "x",
+                    "synopsis_id": "cm"})
+    assert r.ok and r.value == 50
+    q = sde.handle({"type": "adhoc", "request_id": "q3",
+                    "synopsis_id": "cm/7", "query": {"items": [7]}})
+    assert not q.ok
+
+
+def test_unknown_request_is_error(sde):
+    r = sde.handle({"type": "adhoc", "request_id": "e",
+                    "synopsis_id": "nope"})
+    assert not r.ok
+
+
+def test_json_roundtrip(sde):
+    q = sde.handle(json.dumps({"type": "adhoc", "request_id": "jq",
+                               "synopsis_id": "hll"}))
+    out = json.loads(q.to_json())
+    assert out["request_id"] == "jq" and out["ok"]
+
+
+def test_continuous_query():
+    eng = SDE()
+    eng.handle({"type": "build", "request_id": "c", "synopsis_id": "h",
+                "kind": "hyperloglog", "params": {"rse": 0.05},
+                "continuous": True})
+    eng.ingest(np.arange(100, dtype=np.uint32), np.ones(100, np.float32))
+    eng.ingest(np.arange(100, dtype=np.uint32), np.ones(100, np.float32))
+    assert len(eng.continuous_out) == 2
+
+
+def test_load_synopsis_pluggability():
+    eng = SDE()
+    r = eng.handle({"type": "load", "request_id": "l",
+                    "kind_name": "my_cm",
+                    "factory_path": "repro.core.countmin:CountMin"})
+    assert r.ok
+    r = eng.handle({"type": "build", "request_id": "b", "synopsis_id":
+                    "x", "kind": "my_cm", "params": {"eps": 0.05,
+                                                     "delta": 0.1}})
+    assert r.ok
+
+
+def test_federation_merge():
+    fed = Federation(["eu", "us", "ap"])
+    fed.broadcast({"type": "build", "request_id": "f", "synopsis_id":
+                   "h", "kind": "hyperloglog", "params": {"rse": 0.03},
+                   "federated": True, "responsible_site": "eu"})
+    fed.sdes["eu"].ingest(np.arange(0, 2000, dtype=np.uint32),
+                          np.ones(2000, np.float32))
+    fed.sdes["us"].ingest(np.arange(1000, 3000, dtype=np.uint32),
+                          np.ones(2000, np.float32))
+    fed.sdes["ap"].ingest(np.arange(2500, 4000, dtype=np.uint32),
+                          np.ones(1500, np.float32))
+    est = float(fed.query_federated("h", {}, "eu"))
+    assert abs(est - 4000) / 4000 < 0.15
+    assert fed.query_bytes("h") < 3 * 4000 * 4  # far less than raw data
+
+
+def test_planner_budget():
+    p = Planner(WorkflowSpec(n_streams=5000))
+    assert p.choose(0.0).name == "Plan0-exact"
+    assert "DFT" in p.choose(0.08).name
+    costs = {pl.name: pl.cost for pl in p.plans()}
+    assert costs["Plan2-DFT"] < costs["Plan0-exact"]
+
+
+def test_pallas_backend_engine():
+    eng = SDE(backend="pallas")
+    eng.handle({"type": "build", "request_id": "b", "synopsis_id": "cm",
+                "kind": "countmin",
+                "params": {"eps": 0.02, "delta": 0.1, "weighted": False},
+                "per_stream_of_source": True, "n_streams": 32})
+    rng = np.random.RandomState(1)
+    sids = rng.randint(0, 32, 512).astype(np.uint32)
+    eng.ingest(sids, np.ones(512, np.float32))
+    q = eng.handle({"type": "adhoc", "request_id": "q", "synopsis_id":
+                    "cm/5", "query": {"items": [5]}})
+    assert float(q.value[0]) == float((sids == 5).sum())
+
+
+def test_engine_snapshot_restore_and_continue():
+    import tempfile
+    eng = SDE()
+    eng.handle({"type": "build", "request_id": "b", "synopsis_id": "cm",
+                "kind": "countmin",
+                "params": {"eps": 0.02, "delta": 0.1, "weighted": False},
+                "per_stream_of_source": True, "n_streams": 64})
+    rng = np.random.RandomState(0)
+    sids = rng.randint(0, 64, 2048).astype(np.uint32)
+    eng.ingest(sids, np.ones(2048, np.float32))
+    with tempfile.TemporaryDirectory() as d:
+        eng.snapshot(d, 1)
+        eng2 = SDE.restore(d)
+    q1 = eng.handle({"type": "adhoc", "request_id": "q", "synopsis_id":
+                     "cm/5", "query": {"items": [5]}})
+    q2 = eng2.handle({"type": "adhoc", "request_id": "q", "synopsis_id":
+                      "cm/5", "query": {"items": [5]}})
+    assert float(q1.value[0]) == float(q2.value[0])
+    eng2.ingest(sids, np.ones(2048, np.float32))     # keeps running
+    q3 = eng2.handle({"type": "adhoc", "request_id": "q", "synopsis_id":
+                      "cm/5", "query": {"items": [5]}})
+    assert float(q3.value[0]) == 2 * float(q1.value[0])
+
+
+def test_engine_elastic_merge():
+    a, b = SDE(), SDE()
+    for e in (a, b):
+        e.handle({"type": "build", "request_id": "b", "synopsis_id":
+                  "hll", "kind": "hyperloglog", "params": {"rse": 0.03}})
+    a.ingest(np.arange(0, 1500, dtype=np.uint32), np.ones(1500, np.float32))
+    b.ingest(np.arange(1000, 2500, dtype=np.uint32),
+             np.ones(1500, np.float32))
+    a.merge_from(b)
+    q = a.handle({"type": "adhoc", "request_id": "q", "synopsis_id": "hll"})
+    assert abs(float(q.value) - 2500) / 2500 < 0.1
+
+
+def test_cost_estimator_load_balancer():
+    """Paper Section 7: HLL + CM as the optimizer's cost estimator,
+    WFD bin packing balances skewed streams."""
+    from repro.service.balancer import plan_workers, worst_fit_decreasing
+    eng = SDE()
+    eng.handle({"type": "build", "request_id": "b1", "synopsis_id":
+                "card", "kind": "hyperloglog", "params": {"rse": 0.03}})
+    eng.handle({"type": "build", "request_id": "b2", "synopsis_id":
+                "freq", "kind": "countmin",
+                "params": {"eps": 0.005, "delta": 0.01,
+                           "weighted": False}})
+    rng = np.random.RandomState(0)
+    sids = (rng.zipf(1.3, 50000) % 64).astype(np.uint32)  # heavy skew
+    eng.ingest(sids, np.ones(len(sids), np.float32))
+    placement = plan_workers(eng, "card", "freq", list(range(64)),
+                             capacity_per_worker=8000.0)
+    assert placement.n_workers >= 4
+    # indivisible-stream floor: the heaviest single stream / mean load
+    true = np.bincount(sids, minlength=64).astype(float)
+    floor = true.max() / (true.sum() / placement.n_workers)
+    assert placement.imbalance <= max(1.05, floor * 1.10)
+    # and never worse than naive round-robin on the same loads
+    rr_loads = [float(true[w::placement.n_workers].sum())
+                for w in range(placement.n_workers)]
+    rr_imb = max(rr_loads) / (sum(rr_loads) / len(rr_loads))
+    assert placement.imbalance <= rr_imb + 0.05

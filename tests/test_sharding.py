@@ -1,0 +1,160 @@
+"""Sharding rule system + distributed-path equivalence.
+
+The shard_map MoE and the reference MoE must agree numerically; validated
+in a subprocess with 8 fake devices (jax locks the device count at init,
+so the multi-device check cannot run in this process).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.sharding.specs import MeshRules, spec_for
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+        self.empty = False
+
+
+def test_spec_degrades_on_indivisible_dims():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    rules = MeshRules()
+    # kv=8 does not divide 16 -> replicated
+    spec = spec_for(rules, ("tensor",), mesh, (8,))
+    assert spec == type(spec)(None)
+    spec = spec_for(rules, ("tensor",), mesh, (64,))
+    assert spec[0] == "model"
+
+
+def test_batch_prefix_degradation():
+    mesh = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+    rules = MeshRules(batch=("data", "model"))
+    # batch 128 divides data(16) but not data*model(256): degrade prefix
+    spec = spec_for(rules, ("batch",), mesh, (128,))
+    assert spec[0] in ("data", ("data",))
+    spec = spec_for(rules, ("batch",), mesh, (256,))
+    assert spec[0] == ("data", "model")
+
+
+_MOE_EQUIV_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.configs import ARCHS, reduced
+    from repro.models import moe as moe_mod
+    from repro.launch.mesh import rules_for
+
+    cfg = reduced(ARCHS["grok-1-314b"], capacity_factor=8.0)
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    rules = rules_for(cfg)
+    key = jax.random.PRNGKey(0)
+    p = moe_mod.init_moe(key, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, cfg.d_model),
+                          jnp.float32).astype(jnp.bfloat16)
+    ref_out, ref_aux = moe_mod.moe_ffn(x, p, cfg)
+    with mesh:
+        sm_out, sm_aux = jax.jit(
+            lambda x, p: moe_mod.moe_ffn_shardmap(x, p, cfg, mesh, rules)
+        )(x, p)
+    a = np.asarray(ref_out, np.float32)
+    b = np.asarray(sm_out, np.float32)
+    rel = float(np.abs(a - b).max() / (np.abs(a).max() + 1e-9))
+    # per-shard routing differs only via per-shard capacity; with
+    # capacity_factor=8 nothing drops => must match closely
+    print(json.dumps({"rel": rel}))
+    import json as _j
+""").replace("import json as _j", "")
+
+_MOE_EQUIV_SCRIPT = "import json\n" + _MOE_EQUIV_SCRIPT
+
+
+@pytest.mark.slow
+def test_moe_shardmap_matches_reference():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", _MOE_EQUIV_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rel = json.loads(out.stdout.strip().splitlines()[-1])["rel"]
+    assert rel < 0.05, f"shard_map MoE diverges: rel={rel}"
+
+
+@pytest.mark.slow
+def test_dryrun_tiny_mesh_compiles():
+    """A miniature dry-run (8 fake devices, reduced arch) proves the
+    lower+compile machinery end to end without the 512-device cost."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp
+        from repro.configs import ARCHS, reduced, SHAPES
+        import dataclasses
+        from repro.launch.mesh import rules_for
+        from repro.sharding.specs import constrainer
+        from repro.training import optim, train_step as TS
+        from repro.models import model as M
+
+        cfg = reduced(ARCHS["qwen2-0.5b"])
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        rules = rules_for(cfg)
+        constrain = constrainer(rules, mesh)
+        opt = optim.OptConfig()
+        state = jax.eval_shape(lambda: TS.init_train_state(
+            cfg, opt, jax.random.PRNGKey(0)))
+        batch = dict(tokens=jax.ShapeDtypeStruct((8, 32), jnp.int32),
+                     labels=jax.ShapeDtypeStruct((8, 32), jnp.int32))
+        fn = TS.make_train_step(cfg, opt, constrain)
+        with mesh:
+            compiled = jax.jit(fn).lower(state, batch).compile()
+        assert compiled.memory_analysis() is not None
+        print("OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout
+
+
+_EP_EQUIV_SCRIPT = """
+import json, os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs import ARCHS, reduced
+from repro.models import moe as moe_mod
+from repro.launch.mesh import rules_for
+
+cfg = reduced(ARCHS["arctic-480b"], capacity_factor=8.0)
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+rules = rules_for(cfg, mode="decode")
+p = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+x = (jax.random.normal(jax.random.PRNGKey(1), (8, 1, cfg.d_model),
+                       jnp.float32) * 0.3).astype(jnp.bfloat16)
+ref, _ = moe_mod.moe_ffn(x, p, cfg)
+with mesh:
+    ep, _ = jax.jit(lambda x, p: moe_mod.moe_ffn_ep_decode(
+        x, p, cfg, mesh, rules))(x, p)
+a, b = np.asarray(ref, np.float32), np.asarray(ep, np.float32)
+print(json.dumps({"rel": float(np.abs(a-b).max()/(np.abs(a).max()+1e-9))}))
+"""
+
+
+@pytest.mark.slow
+def test_moe_ep_decode_matches_reference():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", _EP_EQUIV_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rel = json.loads(out.stdout.strip().splitlines()[-1])["rel"]
+    assert rel < 0.05, f"EP decode diverges: rel={rel}"

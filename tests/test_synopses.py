@@ -1,0 +1,206 @@
+"""Accuracy-bound unit tests for every synopsis kind (paper Table 1)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import core
+
+
+@pytest.fixture(scope="module")
+def zipf_stream():
+    rng = np.random.RandomState(0)
+    items = rng.zipf(1.3, 30000).astype(np.uint32) % 5000
+    return items, np.ones(len(items), np.float32), np.ones(len(items), bool)
+
+
+def test_countmin_bounds(zipf_stream):
+    items, vals, mask = zipf_stream
+    cm = core.CountMin(eps=0.005, delta=0.01)
+    st = jax.jit(cm.add_batch)(cm.init(None), items, vals, mask)
+    q = np.arange(20, dtype=np.uint32)
+    est = np.asarray(cm.estimate(st, q))
+    true = np.array([(items == i).sum() for i in q], np.float32)
+    assert (est >= true - 1e-3).all(), "CM must never underestimate"
+    assert (est - true <= cm.eps * len(items)).all()
+
+
+def test_hll_accuracy(zipf_stream):
+    items, vals, mask = zipf_stream
+    hll = core.HyperLogLog(rse=0.02)
+    st = jax.jit(hll.add_batch)(hll.init(None), items, vals, mask)
+    true = len(np.unique(items))
+    assert abs(float(hll.estimate(st)) - true) / true < 5 * 0.02
+
+
+def test_ams_l2(zipf_stream):
+    items, vals, mask = zipf_stream
+    ams = core.AMS(eps=0.05, delta=0.05)
+    st = jax.jit(ams.add_batch)(ams.init(None), items, vals, mask)
+    freqs = np.bincount(items).astype(np.float64)
+    true = float((freqs ** 2).sum())
+    assert abs(float(ams.estimate(st)) - true) / true < 3 * ams.eps
+
+
+def test_ams_inner_product(zipf_stream):
+    items, vals, mask = zipf_stream
+    ams = core.AMS(eps=0.05, delta=0.05)
+    a = jax.jit(ams.add_batch)(ams.init(None), items[:15000], vals[:15000],
+                               mask[:15000])
+    b = jax.jit(ams.add_batch)(ams.init(None), items[15000:], vals[15000:],
+                               mask[15000:])
+    fa = np.bincount(items[:15000], minlength=5000).astype(np.float64)
+    fb = np.bincount(items[15000:], minlength=5000).astype(np.float64)
+    true = float(fa @ fb)
+    assert abs(float(ams.inner_product(a, b)) - true) / true < 0.2
+
+
+def test_fm_distinct(zipf_stream):
+    items, vals, mask = zipf_stream
+    fm = core.FMSketch(nmaps=128)
+    st = jax.jit(fm.add_batch)(fm.init(None), items, vals, mask)
+    true = len(np.unique(items))
+    assert abs(float(fm.estimate(st)) - true) / true < 0.3
+
+
+def test_bloom(zipf_stream):
+    items, vals, mask = zipf_stream
+    bl = core.BloomFilter(n_elements=3000, fpr=0.01)
+    st = jax.jit(bl.add_batch)(bl.init(None), items[:3000], vals[:3000],
+                               mask[:3000])
+    present = np.unique(items[:3000])
+    absent = (np.arange(500) + 100000).astype(np.uint32)
+    assert bool(np.asarray(bl.estimate(st, present)).all()), "no false negatives"
+    assert float(np.asarray(bl.estimate(st, absent)).mean()) < 0.05
+
+
+def test_dft_correlation():
+    rng = np.random.RandomState(1)
+    n, F = 64, 12
+    d = core.DFT(window=n, n_coeffs=F, threshold=0.9)
+    t = np.arange(300)
+    x = np.sin(0.25 * t) + 0.1 * rng.randn(300)
+    y = np.sin(0.25 * t + 0.1) + 0.1 * rng.randn(300)
+    feed = jax.jit(d.add_batch)
+    sx = feed(d.init(None), np.zeros(300, np.uint32), x.astype(np.float32),
+              np.ones(300, bool))
+    sy = feed(d.init(None), np.zeros(300, np.uint32), y.astype(np.float32),
+              np.ones(300, bool))
+    from repro.core.dft import corr_from_coeffs
+    est = float(corr_from_coeffs(d.normalized_coeffs(sx),
+                                 d.normalized_coeffs(sy)))
+    true = np.corrcoef(x[-n:], y[-n:])[0, 1]
+    assert abs(est - true) < 0.1
+    # truncation must not overestimate the distance (no false dismissals)
+    assert est >= true - 0.05
+
+
+def test_lossy_counting_heavy_hitters(zipf_stream):
+    items, vals, mask = zipf_stream
+    lc = core.LossyCounting(eps=0.01)
+    st = jax.jit(lc.add_batch)(lc.init(None), items[:5000], vals[:5000],
+                               mask[:5000])
+    freqs = np.bincount(items[:5000])
+    heavy = np.where(freqs > 0.02 * 5000)[0].astype(np.uint32)
+    est = np.asarray(lc.estimate(st, heavy))
+    true = freqs[heavy]
+    assert (est >= true - 0.01 * 5000 - 1).all()
+
+
+def test_gk_quantiles():
+    rng = np.random.RandomState(2)
+    gk = core.GKQuantiles(eps=0.02)
+    data = rng.randn(16384).astype(np.float32)
+    st = gk.init(None)
+    add = jax.jit(gk.add_batch)
+    for i in range(16):
+        st = add(st, np.zeros(1024, np.uint32), data[i * 1024:(i + 1) * 1024],
+                 np.ones(1024, bool))
+    qs = np.array([0.05, 0.25, 0.5, 0.75, 0.95], np.float32)
+    est = np.asarray(gk.estimate(st, qs))
+    for q, e in zip(qs, est):
+        true_rank = (data <= e).mean()
+        assert abs(true_rank - q) < 6 * gk.eps
+
+
+def test_reservoir_uniformity():
+    rs = core.ReservoirSampler(sample_size=256)
+    items = np.arange(10000, dtype=np.uint32)
+    st = jax.jit(rs.add_batch)(rs.init(None), items,
+                               items.astype(np.float32),
+                               np.ones(10000, bool))
+    out = rs.estimate(st)
+    sample = np.asarray(out["items"])[np.asarray(out["valid"])]
+    assert len(sample) == 256
+    assert len(np.unique(sample)) == 256
+    # mean of a uniform sample of [0, 10000) should be near 5000
+    assert abs(sample.astype(np.float64).mean() - 5000) < 800
+
+
+def test_coreset_kmeans():
+    rng = np.random.RandomState(3)
+    centers = np.array([[0, 0], [6, 6], [-6, 6]], np.float32)
+    pts = np.concatenate([c + 0.4 * rng.randn(150, 2).astype(np.float32)
+                          for c in centers])
+    rng.shuffle(pts)
+    tree = core.CoreSetTree(bucket_size=32, dim=2)
+    st = tree.init(None)
+    add = jax.jit(tree.add_batch)
+    for i in range(0, len(pts), 32):
+        chunk = pts[i:i + 32]
+        m = np.ones(len(chunk), bool)
+        if len(chunk) < 32:
+            chunk = np.pad(chunk, ((0, 32 - len(chunk)), (0, 0)))
+            m = np.pad(m, (0, 32 - len(m)))
+        st = add(st, np.zeros(32, np.uint32), chunk, m)
+    est = tree.estimate(st)
+    assert abs(float(est["weights"].sum()) - len(pts)) < 1e-3
+    from repro.core.coreset import weighted_kmeans
+    km, _ = weighted_kmeans(est["points"], est["weights"], 3, iters=15)
+    km = np.sort(np.asarray(km), axis=0)
+    true = np.sort(centers, axis=0)
+    assert np.abs(km - true).max() < 1.0
+
+
+def test_sticky_sampling_recall():
+    rng = np.random.RandomState(4)
+    ss = core.StickySampling(support=0.05, eps=0.01)
+    zipf = rng.zipf(1.5, 20000).astype(np.uint32) % 1000
+    st = jax.jit(ss.add_batch)(ss.init(None), zipf,
+                               np.ones(20000, np.float32),
+                               np.ones(20000, bool))
+    keys, counts, keep = ss.frequent_items(st)
+    freqs = np.bincount(zipf, minlength=1000)
+    true_frequent = set(np.where(freqs >= 0.05 * 20000)[0].tolist())
+    found = set(int(k) for k, kp in zip(np.asarray(keys), np.asarray(keep))
+                if kp and k != 0xFFFFFFFF)
+    assert true_frequent.issubset(found)
+
+
+def test_rhp_cosine():
+    rng = np.random.RandomState(5)
+    rh = core.RHP(n_bits=256)
+    va = rng.randn(400).astype(np.float32)
+    vb = (va + 0.15 * rng.randn(400)).astype(np.float32)
+    ids = np.arange(400, dtype=np.uint32)
+    one = jax.jit(rh.add_batch)
+    sa = one(rh.init(None), ids, va, np.ones(400, bool))
+    sb = one(rh.init(None), ids, vb, np.ones(400, bool))
+    from repro.core.rhp import cosine_similarity
+    est = float(cosine_similarity(rh.signature(sa), rh.signature(sb), 256))
+    true = float(va @ vb / np.linalg.norm(va) / np.linalg.norm(vb))
+    assert abs(est - true) < 0.15
+
+
+def test_pane_window_expiry():
+    pw = core.PaneWindow(core.CountMin(eps=0.01, delta=0.05), n_panes=4,
+                         pane_span=128)
+    st = pw.init(None)
+    add = jax.jit(pw.add_batch)
+    for i in range(8):
+        items = np.full(128, i, np.uint32)
+        st = add(st, items, np.ones(128, np.float32), np.ones(128, bool))
+    recent = float(pw.estimate(st, np.array([7], np.uint32))[0])
+    expired = float(pw.estimate(st, np.array([0], np.uint32))[0])
+    assert recent == 128.0
+    assert expired == 0.0
