@@ -5,11 +5,16 @@
 (c) throughput vs number of summarized streams [50,500,5000]
 (d) federated communication: synopses vs raw streams, vs #sites
 
-This container has ONE core, so (a)'s multi-worker aggregate is simulated
-the way the paper's mechanism works: streams are hash-partitioned into P
-shards, per-shard update time is measured, and aggregate throughput =
-batch_tuples / max-shard-time (workers run concurrently on a real
-cluster). (b), (c), (d) are direct measurements.
+(a) runs on the ENGINE's fused blue path (one jitted, donated-buffer
+dispatch per kind per batch, routing + routed + data-source rows in one
+program). This container has ONE core, so the multi-worker aggregate is
+simulated the way the paper's mechanism works: streams are
+hash-partitioned into P shards, each shard is one SDE engine, per-shard
+ingest time is measured, and aggregate throughput = batch_tuples /
+max-shard-time (workers run concurrently on a real cluster). On a
+multi-device host the same measurement also runs with ONE engine whose
+kind stacks are sharded over the `synopsis` mesh axis (true scale-out).
+(b), (c), (d) are direct measurements.
 """
 from __future__ import annotations
 
@@ -19,6 +24,7 @@ import jax.numpy as jnp
 
 from repro import core
 from repro.core import batched, federated
+from repro.service import SDE
 from repro.streams import StockStream
 from .common import time_fn, csv_row
 
@@ -27,6 +33,14 @@ _KINDS = lambda: dict(
     hll=core.HyperLogLog(rse=0.03),
     dft=core.DFT(window=64, n_coeffs=8, threshold=0.9),
 )
+
+
+def _ingest_sync(eng: SDE, sids, vals):
+    """Ingest and hand the updated stack states to time_fn so its
+    block_until_ready waits for the dispatched update, not just the
+    host-side enqueue (ingest itself returns None)."""
+    eng.ingest(sids, vals)
+    return [s.state for s in eng.stacks.values()]
 
 
 def _update_fns(kinds):
@@ -49,6 +63,9 @@ def run(batch_tuples: int = 262144, full: bool = False):
     fns = _update_fns(kinds)
 
     # ---------------- (a) parallelization degree ----------------
+    # fused blue path: each worker is one SDE maintaining one routed CM
+    # synopsis PER STREAM + 1 data-source HLL over the full stream-id
+    # population (paper setting); ingest is ONE dispatch per kind.
     n_streams = 1000 if not full else 5000
     stock = StockStream(n_streams=n_streams, seed=1)
     sids, vals = stock.level1_batch(batch_tuples)
@@ -57,17 +74,41 @@ def run(batch_tuples: int = 262144, full: bool = False):
         shard_times = []
         for w in range(p):
             sel = shard_of == w
-            t = 0.0
-            cm_states = batched.stacked_init(kinds["cm"], 64)
-            syn = jnp.asarray((sids[sel] % 64).astype(np.int32))
-            items = jnp.asarray(sids[sel].astype(np.uint32))
-            v = jnp.asarray(vals[sel])
-            m = jnp.ones(int(sel.sum()), bool)
-            t += time_fn(fns["cm"], cm_states, syn, items, v, m)
+            eng = SDE()
+            eng.handle({"type": "build", "request_id": "b",
+                        "synopsis_id": "cm", "kind": "countmin",
+                        "params": {"eps": 0.002, "delta": 0.01,
+                                   "weighted": False},
+                        "per_stream_of_source": True,
+                        "n_streams": n_streams})
+            eng.handle({"type": "build", "request_id": "b2",
+                        "synopsis_id": "card", "kind": "hyperloglog",
+                        "params": {"rse": 0.03}})
+            w_sids = sids[sel].astype(np.uint32)
+            w_vals = vals[sel].astype(np.float32)
+            t = time_fn(lambda s=w_sids, v=w_vals, e=eng: _ingest_sync(e, s, v))
             shard_times.append(t)
         thr = batch_tuples / max(shard_times)
         rows.append(csv_row(f"fig5a_parallelism_{p}", max(shard_times),
                             f"throughput={thr:,.0f}tuples/s"))
+
+    # ---- (a') synopsis-axis sharding: one engine, stacks partitioned
+    # across devices (requires a multi-device host; skipped on 1 device)
+    if len(jax.devices()) > 1:
+        n_dev = len(jax.devices())
+        mesh = jax.make_mesh((n_dev, 1), ("data", "model"))
+        eng = SDE(mesh=mesh)
+        eng.handle({"type": "build", "request_id": "b", "synopsis_id":
+                    "cm", "kind": "countmin",
+                    "params": {"eps": 0.002, "delta": 0.01,
+                               "weighted": False},
+                    "per_stream_of_source": True, "n_streams": n_streams})
+        sh_sids = sids.astype(np.uint32)
+        sh_vals = vals.astype(np.float32)
+        t = time_fn(lambda: _ingest_sync(eng, sh_sids, sh_vals))
+        rows.append(csv_row(
+            f"fig5a_sharded_{n_dev}dev", t,
+            f"throughput={batch_tuples / t:,.0f}tuples/s"))
 
     # ---------------- (b) ingestion rate ----------------
     base_sids, base_vals = stock.level1_batch(batch_tuples // 16)

@@ -29,11 +29,17 @@ def stacked_init(kind: Synopsis, capacity: int) -> Any:
         lambda x: jnp.broadcast_to(x, (capacity,) + x.shape).copy(), proto)
 
 
-def grow(stacked: Any, new_capacity: int) -> Any:
-    def g(x):
-        pad = [(0, new_capacity - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
-        return jnp.pad(x, pad)
-    return jax.tree.map(g, stacked)
+def grow(kind: Synopsis, stacked: Any, new_capacity: int) -> Any:
+    """Double capacity, padding NEW rows with the kind's init prototype.
+
+    Zero-padding is wrong for kinds whose empty state is not all-zeros
+    (LossyCounting/StickySampling init ``keys`` to an all-ones sentinel:
+    zero-padded rows would look occupied by item 0).
+    """
+    capacity = jax.tree.leaves(stacked)[0].shape[0]
+    fresh = stacked_init(kind, new_capacity - capacity)
+    return jax.tree.map(
+        lambda x, f: jnp.concatenate([x, f], axis=0), stacked, fresh)
 
 
 def stacked_add_batch(kind: Synopsis, stacked: Any, syn_idx: jax.Array,
@@ -49,6 +55,43 @@ def stacked_add_batch(kind: Synopsis, stacked: Any, syn_idx: jax.Array,
         return kind.add_batch(row_state, items, values, row_mask)
 
     return jax.vmap(per_row)(stacked, jnp.arange(capacity))
+
+
+def stacked_update(kind: Synopsis, stacked: Any, syn_idx: jax.Array,
+                   items: jax.Array, values: jax.Array, mask: jax.Array,
+                   source_rows: jax.Array | None = None) -> Any:
+    """Fused routed + data-source update — ONE dispatch for the whole kind.
+
+    ``syn_idx`` may contain -1 for unrouted tuples; ``source_rows`` is an
+    int32 index vector of rows fed by ALL tuples (data-source synopses).
+    Scatter-path kinds get the source contribution via mergeability: the
+    batch is summarized ONCE into a fresh synopsis, merged into just the
+    source rows and scattered back (exact — every scatter kind's merge
+    is elementwise sum/max; work is proportional to the number of source
+    rows, not capacity). Scan-path kinds fold the source rows into the
+    per-row mask of the single vmap.
+    """
+    routed = mask & (syn_idx >= 0)
+    rows = jnp.maximum(syn_idx, 0)
+    if hasattr(kind, "stacked_add_batch"):
+        out = kind.stacked_add_batch(stacked, rows, items, values, routed)
+        if source_rows is not None:
+            fresh = kind.add_batch(kind.init(None), items, values, mask)
+            sub = jax.tree.map(lambda x: x[source_rows], out)
+            merged = jax.vmap(lambda r: kind.merge(r, fresh))(sub)
+            out = jax.tree.map(
+                lambda x, m: x.at[source_rows].set(m), out, merged)
+        return out
+    capacity = jax.tree.leaves(stacked)[0].shape[0]
+    source_mask = jnp.zeros((capacity,), bool)
+    if source_rows is not None:
+        source_mask = source_mask.at[source_rows].set(True)
+
+    def per_row(row_state, row_id, is_src):
+        row_mask = mask & ((syn_idx == row_id) | is_src)
+        return kind.add_batch(row_state, items, values, row_mask)
+
+    return jax.vmap(per_row)(stacked, jnp.arange(capacity), source_mask)
 
 
 def stacked_step(kind: Synopsis, stacked: Any, values: jax.Array,

@@ -59,6 +59,22 @@ def merge_over_axis(kind: Synopsis, state: Any, axis_name: str) -> Any:
     return acc
 
 
+def merge_rows(kind: Synopsis, stacked_a: Any, rows_a: jax.Array,
+               stacked_b: Any, rows_b: jax.Array) -> Any:
+    """Merge selected rows of stack B into selected rows of stack A in one
+    vectorized dispatch (elastic scale-down absorbs a whole engine's
+    synopses per kind, not one Python-loop merge per synopsis).
+
+    ``rows_a[i]`` receives merge(stacked_a[rows_a[i]], stacked_b[rows_b[i]]).
+    Rows of A must be distinct (each synopsis id owns one row).
+    """
+    sub_a = jax.tree.map(lambda x: x[rows_a], stacked_a)
+    sub_b = jax.tree.map(lambda x: x[rows_b], stacked_b)
+    merged = jax.vmap(kind.merge)(sub_a, sub_b)
+    return jax.tree.map(
+        lambda x, m: x.at[rows_a].set(m), stacked_a, merged)
+
+
 def merge_tree(kind: Synopsis, states: list[Any]) -> Any:
     """Host-side N-way merge (responsible-site synthesis, Case 3)."""
     acc = states[0]

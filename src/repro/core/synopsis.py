@@ -44,6 +44,11 @@ class Synopsis(Protocol):
 
 _REGISTRY: Dict[str, Callable[..., Synopsis]] = {}
 
+# name -> concrete type the factory produced (filled lazily by make_kind).
+# Needed because a factory may be any callable, not only the kind class
+# itself — snapshot manifests must still map instances back to a name.
+_PRODUCED_TYPES: Dict[str, type] = {}
+
 
 def register_kind(name: str, factory: Callable[..., Synopsis],
                   *, overwrite: bool = False) -> None:
@@ -51,13 +56,16 @@ def register_kind(name: str, factory: Callable[..., Synopsis],
     if name in _REGISTRY and not overwrite:
         raise ValueError(f"synopsis kind {name!r} already registered")
     _REGISTRY[name] = factory
+    _PRODUCED_TYPES.pop(name, None)
 
 
 def make_kind(name: str, **params: Any) -> Synopsis:
     if name not in _REGISTRY:
         raise KeyError(
             f"unknown synopsis kind {name!r}; known: {sorted(_REGISTRY)}")
-    return _REGISTRY[name](**params)
+    kind = _REGISTRY[name](**params)
+    _PRODUCED_TYPES[name] = type(kind)
+    return kind
 
 
 def known_kinds() -> list[str]:
@@ -72,8 +80,16 @@ def kind_params(kind: Synopsis) -> Dict[str, Any]:
 
 
 def name_of_kind(kind: Synopsis) -> str:
-    """Registry name of a kind instance (for snapshot manifests)."""
+    """Registry name of a kind instance (for snapshot manifests).
+
+    Prefers a class-registered name; falls back to the type the factory
+    produced, so kinds plugged in via Load Synopsis with a non-class
+    factory (lambda / function) survive snapshot/restore.
+    """
     for name, factory in _REGISTRY.items():
         if factory is type(kind):
+            return name
+    for name, produced in _PRODUCED_TYPES.items():
+        if produced is type(kind):
             return name
     raise KeyError(f"kind {type(kind).__name__} not in registry")

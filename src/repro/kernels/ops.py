@@ -34,26 +34,59 @@ def _pad_to(x: jax.Array, mult: int, axis: int = 0, value=0):
     return jnp.pad(x, pad, constant_values=value)
 
 
+def _source_fold(out: jax.Array, idx: jax.Array, contrib: jax.Array,
+                 source_rows: jax.Array) -> jax.Array:
+    """Add a fresh single sketch into the data-source rows: out [n, d, w]
+    indexed at source_rows += scatter(contrib at idx). Both CM and AMS
+    merges are linear, so adding the batch's fresh sketch is exact; work
+    is proportional to the number of source rows, not capacity."""
+    n, d, w = out.shape
+    rows = jnp.arange(d)[None, :]
+    fresh = jnp.zeros((d, w), jnp.float32).at[rows, idx].add(contrib)
+    return out.at[source_rows].add(fresh[None])
+
+
 def countmin_update(counts: jax.Array, syn_idx: jax.Array, items: jax.Array,
                     values: jax.Array, mask: jax.Array, *, seeds: jax.Array,
-                    log2_width: int, weighted: bool = True) -> jax.Array:
-    """Pallas-backed stacked CountMin update. counts [n, d, w]."""
+                    log2_width: int, weighted: bool = True,
+                    source_rows: jax.Array | None = None,
+                    source_tuple_mask: jax.Array | None = None) -> jax.Array:
+    """Pallas-backed stacked CountMin update. counts [n, d, w].
+
+    ``source_rows`` indexes data-source rows fed by every tuple under
+    ``source_tuple_mask`` [T] (defaults to all tuples): their delta is
+    accumulated ONCE as a fresh single sketch and broadcast-added (CM is
+    linear), fused into the same dispatch as the routed kernel scatter.
+    """
     n, d, w = counts.shape
     idx = hashing.bucket_hash(items, seeds, log2_width)
     v = values if weighted else jnp.ones_like(values)
-    v = v * mask.astype(jnp.float32)
+    vm = v * mask.astype(jnp.float32)
     signs = jnp.ones((items.shape[0], d), jnp.float32)
-    return _scatter_call(counts, syn_idx, idx, v, signs)
+    out = _scatter_call(counts, syn_idx, idx, vm, signs)
+    if source_rows is not None:
+        tm = mask if source_tuple_mask is None else source_tuple_mask
+        vs = (v * tm.astype(jnp.float32))[:, None]
+        out = _source_fold(out, idx, jnp.broadcast_to(vs, idx.shape),
+                           source_rows)
+    return out
 
 
 def ams_update(counts: jax.Array, syn_idx: jax.Array, items: jax.Array,
                values: jax.Array, mask: jax.Array, *, seeds: jax.Array,
-               log2_width: int) -> jax.Array:
+               log2_width: int,
+               source_rows: jax.Array | None = None,
+               source_tuple_mask: jax.Array | None = None) -> jax.Array:
     """Pallas-backed stacked AMS/count-sketch update. counts [n, d, w]."""
     idx = hashing.bucket_hash(items, seeds, log2_width)
     sgn = hashing.sign_hash(items, seeds)
     v = values * mask.astype(jnp.float32)
-    return _scatter_call(counts, syn_idx, idx, v, sgn)
+    out = _scatter_call(counts, syn_idx, idx, v, sgn)
+    if source_rows is not None:
+        tm = mask if source_tuple_mask is None else source_tuple_mask
+        vs = (values * tm.astype(jnp.float32))[:, None] * sgn
+        out = _source_fold(out, idx, vs, source_rows)
+    return out
 
 
 def _scatter_call(counts, syn_idx, idx, values, signs):
@@ -77,14 +110,23 @@ def _scatter_call(counts, syn_idx, idx, values, signs):
 
 
 def hll_update(regs: jax.Array, syn_idx: jax.Array, items: jax.Array,
-               mask: jax.Array, *, seed: int, p: int) -> jax.Array:
-    """Pallas-backed stacked HLL update. regs [n, m]."""
+               mask: jax.Array, *, seed: int, p: int,
+               source_rows: jax.Array | None = None,
+               source_tuple_mask: jax.Array | None = None) -> jax.Array:
+    """Pallas-backed stacked HLL update. regs [n, m]. Data-source rows
+    (``source_rows``) take an elementwise max with a fresh single-HLL of
+    the batch — merge = max, fused into the same dispatch."""
     n, m = regs.shape
     h = hashing.hash_u32(items, seed)
     bucket = (h >> np.uint32(32 - p)).astype(jnp.int32)
     rest = (h << np.uint32(p)).astype(jnp.uint32)
-    rank = jnp.where(rest == 0, 32 - p + 1, hashing.clz32(rest) + 1)
-    rank = jnp.where(mask, rank, 0).astype(jnp.int32)
+    raw_rank = jnp.where(rest == 0, 32 - p + 1, hashing.clz32(rest) + 1)
+    rank = jnp.where(mask, raw_rank, 0).astype(jnp.int32)
+    src_fresh = None
+    if source_rows is not None:
+        tm = mask if source_tuple_mask is None else source_tuple_mask
+        src_rank = jnp.where(tm, raw_rank, 0).astype(jnp.int32)
+        src_fresh = jnp.zeros((m,), jnp.int32).at[bucket].max(src_rank)
 
     t_tile = 128
     s_tile = min(8, n)
@@ -98,7 +140,10 @@ def hll_update(regs: jax.Array, syn_idx: jax.Array, items: jax.Array,
     out = hll_max.hll_max_update(padded, syn_idx, bucket, rank,
                                  s_tile=s_tile, m_tile=m_tile, t_tile=t_tile,
                                  interpret=_interpret())
-    return out[:n, :m]
+    out = out[:n, :m]
+    if src_fresh is not None:
+        out = out.at[source_rows].max(src_fresh[None, :])
+    return out
 
 
 def dft_step(re: jax.Array, im: jax.Array, delta: jax.Array,

@@ -27,10 +27,12 @@ from typing import Any, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import core
 from repro.core import batched, federated
 from repro.core.synopsis import Synopsis, kind_params
+from repro.sharding import specs
 from . import api
 
 _MAX_STREAMS = 1 << 16       # routing-table size (stream-id space)
@@ -49,16 +51,57 @@ class _Entry:
 
 
 class _KindStack:
-    """All synopses of one kind: stacked state + routing table."""
+    """All synopses of one kind: stacked state + routing table.
 
-    def __init__(self, kind: Synopsis, capacity: int = 64):
+    On a multi-device mesh the stacked state's leading [capacity] row
+    axis is partitioned over the ``synopsis`` logical axis (horizontal
+    scale-out, paper Fig. 5); the routing table is replicated.
+    """
+
+    def __init__(self, kind: Synopsis, capacity: int = 64,
+                 mesh: Optional[Mesh] = None,
+                 rules: Optional[specs.MeshRules] = None):
         self.kind = kind
         self.capacity = capacity
+        self.mesh = mesh
+        self.rules = rules or specs.DEFAULT_RULES
         self.state = batched.stacked_init(kind, capacity)
         self.route = jnp.full((_MAX_STREAMS,), -1, jnp.int32)  # stream->row
         self.source_rows: List[int] = []   # rows fed by ALL tuples
         self.used: List[bool] = [False] * capacity
         self.is_timeseries = hasattr(kind, "step")
+        self._source_mask = None           # device cache, see source_mask()
+        self._place()
+
+    @property
+    def sharding(self) -> Optional[NamedSharding]:
+        if self.mesh is None or self.mesh.empty:
+            return None
+        return specs.stack_sharding(self.rules, self.mesh, self.capacity)
+
+    def _place(self):
+        """Pin state rows over the synopsis axis, replicate the route."""
+        sh = self.sharding
+        if sh is None:
+            return
+        self.state = jax.tree.map(lambda x: jax.device_put(x, sh), self.state)
+        self.route = jax.device_put(
+            self.route, NamedSharding(self.mesh, P()))
+
+    def source_rows_idx(self) -> Optional[jax.Array]:
+        """int32 index vector of data-source rows; None when there are
+        none (lets the no-source fused path skip the merge branch at
+        trace time). Cached on device; invalidated on lifecycle changes."""
+        if not self.source_rows:
+            return None
+        if self._source_mask is None:
+            self._source_mask = jnp.asarray(
+                np.asarray(self.source_rows, np.int32))
+        return self._source_mask
+
+    def mark_source(self, row: int):
+        self.source_rows.append(row)
+        self._source_mask = None
 
     def alloc(self) -> int:
         for i, u in enumerate(self.used):
@@ -67,28 +110,59 @@ class _KindStack:
                 return i
         old_cap = self.capacity
         self.capacity *= 2
-        self.state = batched.grow(self.state, self.capacity)
+        self.state = batched.grow(self.kind, self.state, self.capacity)
         self.used.extend([False] * old_cap)
         self.used[old_cap] = True
+        self._source_mask = None
+        self._place()
         return old_cap
 
     def free(self, row: int):
-        self.used[row] = False
-        self.route = jnp.where(self.route == row, -1, self.route)
-        if row in self.source_rows:
-            self.source_rows.remove(row)
+        self.free_rows([row])
+
+    def free_rows(self, rows: List[int]):
+        """Release rows AND re-initialize their state: the next alloc of
+        these slots must hand out fresh synopses, not the dead ones'
+        counts (freed-row reuse corruption). Batched — stopping a
+        per-stream group of thousands is ONE scatter, not one full-state
+        copy per row."""
+        for row in rows:
+            self.used[row] = False
+            if row in self.source_rows:
+                self.source_rows.remove(row)
+                self._source_mask = None
+        idx = jnp.asarray(rows, jnp.int32)
+        self.route = jnp.where(jnp.isin(self.route, idx), -1, self.route)
+        fresh = batched.stacked_init(self.kind, len(rows))
+        self.state = jax.tree.map(
+            lambda x, f: x.at[idx].set(f), self.state, fresh)
+        if self.sharding is not None:
+            self.state = jax.tree.map(
+                lambda x: jax.device_put(x, self.sharding), self.state)
 
 
 class SDE:
-    """One SDEaaS instance (one site/cluster in federated settings)."""
+    """One SDEaaS instance (one site/cluster in federated settings).
 
-    def __init__(self, site: str = "site-0", backend: str = "xla"):
+    Pass a ``mesh`` to shard every kind stack's row axis across devices
+    (the ``synopsis`` logical axis of ``sharding/specs.py``); omit it for
+    single-device operation.
+    """
+
+    def __init__(self, site: str = "site-0", backend: str = "xla",
+                 mesh: Optional[Mesh] = None,
+                 rules: Optional[specs.MeshRules] = None):
         self.site = site
         self.backend = backend
+        self.mesh = mesh
+        self.rules = rules or specs.DEFAULT_RULES
         self.stacks: Dict[Any, _KindStack] = {}
         self.entries: Dict[str, _Entry] = {}
         self.continuous_out: List[api.Response] = []
         self.tuples_ingested = 0
+
+    def _new_stack(self, kind: Synopsis, capacity: int = 64) -> _KindStack:
+        return _KindStack(kind, capacity, mesh=self.mesh, rules=self.rules)
 
     # ------------------------------------------------------------------
     # red path: requests
@@ -123,7 +197,7 @@ class SDE:
             cap = 64
             if req.per_stream_of_source and req.n_streams:
                 cap = max(64, 1 << int(np.ceil(np.log2(req.n_streams))))
-            stack = _KindStack(kind, cap)
+            stack = self._new_stack(kind, cap)
             self.stacks[kind] = stack
 
         def add_one(sid: Optional[int], syn_id: str):
@@ -132,7 +206,7 @@ class SDE:
                 return
             row = stack.alloc()
             if sid is None:
-                stack.source_rows.append(row)
+                stack.mark_source(row)
             else:
                 stack.route = stack.route.at[sid].set(row)
             self.entries[syn_id] = _Entry(
@@ -156,9 +230,12 @@ class SDE:
         if not ids:
             return api.Response(request_id=req.request_id, ok=False,
                                 error=f"unknown synopsis {req.synopsis_id!r}")
+        freed: Dict[Any, List[int]] = {}
         for k in ids:
             e = self.entries.pop(k)
-            self.stacks[e.kind_key].free(e.row)
+            freed.setdefault(e.kind_key, []).append(e.row)
+        for kind, rows in freed.items():
+            self.stacks[kind].free_rows(rows)
         return api.Response(request_id=req.request_id,
                             synopsis_id=req.synopsis_id, value=len(ids))
 
@@ -194,7 +271,9 @@ class SDE:
     def ingest(self, stream_ids: np.ndarray, values: np.ndarray,
                mask: Optional[np.ndarray] = None) -> None:
         """One batch of (stream, value) tuples; updates EVERY maintained
-        synopsis of every kind with one jitted call per kind stack."""
+        synopsis of every kind with EXACTLY ONE jitted, donated-buffer
+        dispatch per kind stack — routing lookup, routed rows and
+        data-source rows are fused into that single program."""
         t = len(stream_ids)
         if mask is None:
             mask = np.ones(t, bool)
@@ -211,28 +290,17 @@ class SDE:
         self._emit_continuous()
 
     def _ingest_stack(self, stack: _KindStack, sids, items, vals, msk):
-        syn_idx = stack.route[sids]                     # [-1 => unrouted]
-        routed = msk & (syn_idx >= 0)
-        state = _update(stack.kind, self.backend, stack.state,
-                        jnp.maximum(syn_idx, 0), items, vals, routed)
-        # data-source synopses see every tuple
-        for row in stack.source_rows:
-            state = _update(stack.kind, self.backend, state,
-                            jnp.full_like(syn_idx, row), items, vals, msk)
-        stack.state = state
+        stack.state = _update(
+            stack.kind, self.backend, stack.sharding, stack.state,
+            stack.route, sids, items, vals, msk, stack.source_rows_idx())
 
     def _ingest_timeseries(self, stack: _KindStack, sids, vals, msk):
         """Time-series kinds (DFT): one tick per stream per batch — the
         batch is a StatStream 'basic window'; the last value per stream
-        wins (documented resolution reduction)."""
-        syn_idx = stack.route[sids]
-        routed = msk & (syn_idx >= 0)
-        rows = jnp.where(routed, syn_idx, stack.capacity)  # overflow slot
-        per_row = jnp.zeros((stack.capacity + 1,), jnp.float32)
-        per_row = per_row.at[rows].set(vals)               # last write wins
-        hit = jnp.zeros((stack.capacity + 1,), bool).at[rows].set(routed)
-        stack.state = _step_all(stack.kind, stack.state,
-                                per_row[:-1], hit[:-1])
+        wins (documented resolution reduction). Route scatter + step are
+        one fused dispatch."""
+        stack.state = _step_all(stack.kind, stack.sharding, stack.state,
+                                stack.route, sids, vals, msk)
 
     def _emit_continuous(self):
         for sid, e in self.entries.items():
@@ -287,8 +355,12 @@ class SDE:
         ckpt.save(arrays, directory, step, extra_manifest=manifest)
 
     @classmethod
-    def restore(cls, directory: str, step: Optional[int] = None) -> "SDE":
-        """Rebuild a running engine from a snapshot (restart path)."""
+    def restore(cls, directory: str, step: Optional[int] = None, *,
+                mesh: Optional[Mesh] = None,
+                rules: Optional[specs.MeshRules] = None) -> "SDE":
+        """Rebuild a running engine from a snapshot (restart path). Pass
+        a ``mesh`` to restore onto a (possibly different) device mesh —
+        the elastic repartition path."""
         import repro.core as core_mod
         from repro.training import checkpoint as ckpt
         # structure: rebuild kinds first, then load arrays into shape
@@ -298,13 +370,14 @@ class SDE:
         with open(os.path.join(directory, f"step-{step_:08d}",
                                "manifest.json")) as f:
             man = _json.load(f)
-        eng = cls(site=man["site"], backend=man["backend"])
+        eng = cls(site=man["site"], backend=man["backend"], mesh=mesh,
+                  rules=rules)
         eng.tuples_ingested = man["tuples_ingested"]
         kinds = []
         like = {}
         for i, sk in enumerate(man["stacks"]):
             kind = core_mod.make_kind(sk["kind"], **sk["params"])
-            stack = _KindStack(kind, sk["capacity"])
+            stack = eng._new_stack(kind, sk["capacity"])
             stack.used = list(sk["used"])
             stack.source_rows = list(sk["source_rows"])
             eng.stacks[kind] = stack
@@ -314,6 +387,7 @@ class SDE:
         for i, kind in enumerate(kinds):
             eng.stacks[kind].state = arrays[f"stack{i}"]["state"]
             eng.stacks[kind].route = arrays[f"stack{i}"]["route"]
+            eng.stacks[kind]._place()
         for sid, e in man["entries"].items():
             eng.entries[sid] = _Entry(
                 synopsis_id=sid, kind_key=kinds[e["kind_index"]],
@@ -325,26 +399,41 @@ class SDE:
 
     def merge_from(self, other: "SDE") -> None:
         """Elastic scale-down: absorb another engine's synopses.
-        Matching synopsis ids merge (mergeability); new ids transfer."""
+        Matching synopsis ids merge (mergeability) — vectorized into ONE
+        row-wise merge dispatch per kind; new ids transfer row by row."""
+        matches: Dict[Any, tuple[list[int], list[int]]] = {}
+        transfers = []
         for sid, oe in other.entries.items():
-            o_state = other.state_of(sid)
             if sid in self.entries:
                 e = self.entries[sid]
-                merged = e.kind_key.merge(self.state_of(sid), o_state)
-                stack = self.stacks[e.kind_key]
-                stack.state = batched.set_row(stack.state, e.row, merged)
+                if oe.kind_key != e.kind_key:
+                    raise ValueError(
+                        f"synopsis {sid!r} is {type(e.kind_key).__name__} "
+                        f"here but {type(oe.kind_key).__name__} on "
+                        f"{other.site!r}; cannot merge")
+                rows_a, rows_b = matches.setdefault(e.kind_key, ([], []))
+                rows_a.append(e.row)
+                rows_b.append(oe.row)
             else:
-                kind = oe.kind_key
-                if kind not in self.stacks:
-                    self.stacks[kind] = _KindStack(kind, 64)
-                stack = self.stacks[kind]
-                row = stack.alloc()
-                stack.state = batched.set_row(stack.state, row, o_state)
-                if oe.stream_id is None:
-                    stack.source_rows.append(row)
-                else:
-                    stack.route = stack.route.at[oe.stream_id].set(row)
-                self.entries[sid] = dataclasses.replace(oe, row=row)
+                transfers.append((sid, oe))
+        for kind, (rows_a, rows_b) in matches.items():
+            stack = self.stacks[kind]
+            stack.state = federated.merge_rows(
+                kind, stack.state, jnp.asarray(rows_a, jnp.int32),
+                other.stacks[kind].state, jnp.asarray(rows_b, jnp.int32))
+        for sid, oe in transfers:
+            kind = oe.kind_key
+            if kind not in self.stacks:
+                self.stacks[kind] = self._new_stack(kind, 64)
+            stack = self.stacks[kind]
+            row = stack.alloc()
+            stack.state = batched.set_row(stack.state, row,
+                                          other.state_of(sid))
+            if oe.stream_id is None:
+                stack.mark_source(row)
+            else:
+                stack.route = stack.route.at[oe.stream_id].set(row)
+            self.entries[sid] = dataclasses.replace(oe, row=row)
         self.tuples_ingested += other.tuples_ingested
 
 
@@ -354,42 +443,76 @@ def _json_params(params):
 
 
 # ---------------------------------------------------------------------------
-# jitted update/estimate dispatch (cached per (kind, backend, shapes))
+# jitted update/estimate dispatch (cached per (kind, backend, sharding,
+# has_sources, shapes)). The cached program is the WHOLE blue path for one
+# kind: route lookup, routed update and data-source update fused into one
+# dispatch; the state buffer is donated (in-place on device), and — on a
+# mesh — pinned to the stack's `synopsis`-axis sharding.
 # ---------------------------------------------------------------------------
 import functools
 
 
 @functools.lru_cache(maxsize=None)
-def _update_fn(kind, backend: str):
-    if backend == "pallas":
-        from repro.kernels import ops as kops
-        if isinstance(kind, core.CountMin):
-            seeds = kind._seeds()
-            return jax.jit(lambda st, syn, it, v, m: kops.countmin_update(
-                st, syn, it, v, m, seeds=seeds, log2_width=kind.log2_width,
-                weighted=kind.weighted))
-        if isinstance(kind, core.AMS):
-            seeds = kind._seeds()
-            return jax.jit(lambda st, syn, it, v, m: kops.ams_update(
-                st, syn, it, v, m, seeds=seeds, log2_width=kind.log2_width))
-        if isinstance(kind, core.HyperLogLog):
-            return jax.jit(lambda st, syn, it, v, m: kops.hll_update(
-                st, syn, it, m, seed=kind.seed, p=kind.p))
-        # no kernel for this kind: fall through to XLA path
-    return jax.jit(functools.partial(batched.stacked_add_batch, kind))
+def _update_fn(kind, backend: str, sharding, has_sources: bool):
+    def fused(state, route, sids, items, vals, msk, *src):
+        src_rows = src[0] if has_sources else None
+        syn_idx = route[sids]                      # [-1 => unrouted]
+        routed = msk & (syn_idx >= 0)
+        rows = jnp.maximum(syn_idx, 0)
+        if backend == "pallas":
+            from repro.kernels import ops as kops
+            if isinstance(kind, core.CountMin):
+                return kops.countmin_update(
+                    state, rows, items, vals, routed, seeds=kind._seeds(),
+                    log2_width=kind.log2_width, weighted=kind.weighted,
+                    source_rows=src_rows, source_tuple_mask=msk)
+            if isinstance(kind, core.AMS):
+                return kops.ams_update(
+                    state, rows, items, vals, routed, seeds=kind._seeds(),
+                    log2_width=kind.log2_width,
+                    source_rows=src_rows, source_tuple_mask=msk)
+            if isinstance(kind, core.HyperLogLog):
+                return kops.hll_update(
+                    state, rows, items, routed, seed=kind.seed, p=kind.p,
+                    source_rows=src_rows, source_tuple_mask=msk)
+            # no kernel for this kind: fall through to XLA path
+        return batched.stacked_update(kind, state, syn_idx, items, vals,
+                                      msk, src_rows)
+
+    kw = dict(donate_argnums=0)
+    if sharding is not None:
+        kw["out_shardings"] = sharding
+    return jax.jit(fused, **kw)
 
 
-def _update(kind, backend, state, syn_idx, items, vals, mask):
-    return _update_fn(kind, backend)(state, syn_idx, items, vals, mask)
+def _update(kind, backend, sharding, state, route, sids, items, vals, msk,
+            src_rows=None):
+    fn = _update_fn(kind, backend, sharding, src_rows is not None)
+    if src_rows is None:
+        return fn(state, route, sids, items, vals, msk)
+    return fn(state, route, sids, items, vals, msk, src_rows)
 
 
 @functools.lru_cache(maxsize=None)
-def _step_fn(kind):
-    return jax.jit(functools.partial(batched.stacked_step, kind))
+def _step_fn(kind, sharding):
+    def fused(state, route, sids, vals, msk):
+        capacity = jax.tree.leaves(state)[0].shape[0]
+        syn_idx = route[sids]
+        routed = msk & (syn_idx >= 0)
+        rows = jnp.where(routed, syn_idx, capacity)    # overflow slot
+        per_row = jnp.zeros((capacity + 1,), jnp.float32)
+        per_row = per_row.at[rows].set(vals)           # last write wins
+        hit = jnp.zeros((capacity + 1,), bool).at[rows].set(routed)
+        return batched.stacked_step(kind, state, per_row[:-1], hit[:-1])
+
+    kw = dict(donate_argnums=0)
+    if sharding is not None:
+        kw["out_shardings"] = sharding
+    return jax.jit(fused, **kw)
 
 
-def _step_all(kind, state, vals, mask):
-    return _step_fn(kind)(state, vals, mask)
+def _step_all(kind, sharding, state, route, sids, vals, msk):
+    return _step_fn(kind, sharding)(state, route, sids, vals, msk)
 
 
 def _estimate(kind, state, query: Dict[str, Any]):

@@ -10,6 +10,10 @@ map them onto physical mesh axes:
                                 grok no — 8 experts don't divide 16)
   seq      -> "model" | None    sequence/context parallel for activations
                                 and seq-sharded KV caches
+  synopsis -> "data"            SDE kind-stack row axis: the [capacity]
+                                leading dim of every stacked synopsis
+                                state is partitioned across workers
+                                (paper Fig. 5 scale-out)
 
 Rules compose per-architecture via ModelConfig flags; unknown / None
 logical names map to replicated dims. When a logical dim does not divide
@@ -32,6 +36,7 @@ class MeshRules:
     expert: Optional[str] = "model"
     seq: Optional[str] = None          # activations seq axis (SP)
     kv_seq: Optional[str] = "model"    # decode cache seq axis
+    synopsis: Optional[str] = "data"   # SDE stacked-state row axis
 
     def resolve(self, logical: Optional[str], mesh: Mesh):
         if logical is None:
@@ -79,6 +84,17 @@ def np_prod(xs):
 def sharding_for(rules: MeshRules, logical_axes, mesh: Mesh,
                  dim_sizes=()) -> NamedSharding:
     return NamedSharding(mesh, spec_for(rules, logical_axes, mesh, dim_sizes))
+
+
+def stack_sharding(rules: MeshRules, mesh: Mesh,
+                   capacity: int) -> NamedSharding:
+    """Sharding for a stacked synopsis state: partition the leading
+    [capacity] row axis over the ``synopsis`` logical axis, replicate
+    everything trailing (the per-row sketch dims). A P spec shorter than
+    the leaf rank leaves the remaining dims replicated, so ONE sharding
+    covers every leaf of the stacked pytree."""
+    return NamedSharding(mesh, spec_for(rules, ("synopsis",), mesh,
+                                        (capacity,)))
 
 
 def constrainer(rules: MeshRules, mesh: Mesh):

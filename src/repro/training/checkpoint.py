@@ -27,7 +27,7 @@ import numpy as np
 
 
 def _flatten_with_paths(tree: Any):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
     for path, leaf in flat:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))

@@ -12,6 +12,7 @@ from repro.core import hashing
 @pytest.mark.parametrize("t,n,d,log2w", [
     (64, 1, 3, 8), (700, 20, 4, 9), (1024, 128, 5, 10), (333, 7, 2, 7),
 ])
+@pytest.mark.smoke
 def test_countmin_kernel_sweep(t, n, d, log2w):
     rng = np.random.RandomState(t + n)
     seeds = jnp.asarray(hashing.row_seeds(7, d))

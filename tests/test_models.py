@@ -81,6 +81,7 @@ def test_param_count_close_to_label(arch):
     assert abs(n - label) / label < 0.35, f"{arch}: {n:.1f}B vs ~{label}B"
 
 
+@pytest.mark.smoke
 def test_input_specs_cover_all_cells():
     for arch, cfg in ARCHS.items():
         for shape in SHAPES.values():

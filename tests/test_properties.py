@@ -8,6 +8,8 @@ HLL monotonicity, window conservation.
 import numpy as np
 import jax
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st, HealthCheck
 
 from repro import core
@@ -26,6 +28,7 @@ def _feed(kind, items):
         np.ones(len(items), bool))
 
 
+@pytest.mark.smoke
 @given(a=streams, b=streams)
 @settings(**_settings)
 def test_cm_merge_equals_concat(a, b):

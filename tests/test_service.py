@@ -29,6 +29,7 @@ def sde():
     return eng
 
 
+@pytest.mark.smoke
 def test_adhoc_query(sde):
     q = sde.handle({"type": "adhoc", "request_id": "q", "synopsis_id":
                     "cm/7", "query": {"items": [7]}})

@@ -22,6 +22,7 @@ class _FakeMesh:
         self.empty = False
 
 
+@pytest.mark.smoke
 def test_spec_degrades_on_indivisible_dims():
     mesh = _FakeMesh({"data": 16, "model": 16})
     rules = MeshRules()

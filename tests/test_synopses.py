@@ -14,6 +14,7 @@ def zipf_stream():
     return items, np.ones(len(items), np.float32), np.ones(len(items), bool)
 
 
+@pytest.mark.smoke
 def test_countmin_bounds(zipf_stream):
     items, vals, mask = zipf_stream
     cm = core.CountMin(eps=0.005, delta=0.01)

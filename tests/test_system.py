@@ -8,6 +8,8 @@
 """
 import tempfile
 
+import pytest
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -21,6 +23,7 @@ from repro.training import OptConfig, init_train_state, make_train_step
 from repro.training import checkpoint as ckpt
 
 
+@pytest.mark.smoke
 def test_stock_correlation_workflow():
     n, window = 200, 64
     stock = StockStream(n_streams=n, group_size=10, noise=0.2, seed=11)

@@ -136,6 +136,7 @@ def test_metric_monitor_finds_correlations():
     assert all("noise" not in g for g in groups)
 
 
+@pytest.mark.smoke
 def test_stock_stream_resume_exact():
     s1 = StockStream(n_streams=32, seed=5)
     _ = s1.ticks(100)
