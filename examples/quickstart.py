@@ -56,6 +56,18 @@ def main():
     print(f"stock 7 DFT bucket:       {int(q.value['bucket'])} "
           f"(coeffs {q.value['coeffs'].shape})")
 
+    # 3b. Querying at scale: N ad-hoc queries of one kind are answered by
+    #     ONE jitted stacked-estimate dispatch (the batched red path) —
+    #     this is what keeps thousands of concurrent SDEaaS queries from
+    #     serializing on host round trips (paper Fig. 8).
+    batch = sde.handle({
+        "type": "query_many", "request_id": "qm",
+        "queries": [{"synopsis_id": f"bids/{s}", "query": {"items": [s]}}
+                    for s in range(100)]})
+    vols = [float(r["value"][0]) for r in batch.value]
+    print(f"\n100 bid volumes in one dispatch: "
+          f"min={min(vols):,.0f} max={max(vols):,.0f}")
+
     # 4. Federated merge across two 'sites' (yellow path).
     fed = Federation(["eu", "us"])
     fed.broadcast({"type": "build", "request_id": "f", "synopsis_id": "h",

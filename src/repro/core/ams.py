@@ -72,6 +72,11 @@ class AMS:
         """L2-norm^2 estimate (self inner product)."""
         return self.inner_product(state, state)
 
+    def stacked_estimate(self, state: jax.Array, rows: jax.Array) -> jax.Array:
+        """L2-norm^2 of each requested row of a stack [n, d, w]."""
+        sub = state[rows]                                      # [N, d, w]
+        return jnp.median(jnp.sum(sub * sub, axis=-1), axis=-1)
+
     def inner_product(self, a: jax.Array, b: jax.Array) -> jax.Array:
         row = jnp.sum(a * b, axis=-1)          # [d]
         return jnp.median(row)

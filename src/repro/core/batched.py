@@ -100,8 +100,24 @@ def stacked_step(kind: Synopsis, stacked: Any, values: jax.Array,
     return jax.vmap(kind.step)(stacked, values, mask)
 
 
-def stacked_estimate(kind: Synopsis, stacked: Any, *args: Any) -> Any:
-    return jax.vmap(lambda s: kind.estimate(s, *args))(stacked)
+def stacked_estimate(kind: Synopsis, stacked: Any, rows: jax.Array | None,
+                     *args: Any) -> Any:
+    """Batched red path: estimates for ``rows`` of the stack in ONE program
+    (the read-side twin of ``stacked_update``).
+
+    ``rows`` is an int32 index vector (None => every row); each extra query
+    arg carries a leading axis matching ``rows`` so query q evaluates row
+    ``rows[q]`` with its OWN arguments (N ad-hoc queries, one dispatch).
+    Kinds provide ``stacked_estimate`` for gather-specialized reads; the
+    fallback vmaps the scalar ``estimate`` over the gathered rows.
+    """
+    if rows is None:
+        capacity = jax.tree.leaves(stacked)[0].shape[0]
+        rows = jnp.arange(capacity, dtype=jnp.int32)
+    if hasattr(kind, "stacked_estimate"):
+        return kind.stacked_estimate(stacked, rows, *args)
+    sub = jax.tree.map(lambda x: x[rows], stacked)
+    return jax.vmap(lambda s, *a: kind.estimate(s, *a))(sub, *args)
 
 
 def stacked_row(stacked: Any, row: int) -> Any:

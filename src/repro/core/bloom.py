@@ -64,6 +64,13 @@ class BloomFilter:
         idx = hashing.bucket_hash(items, self._seeds(), self.log2_bits)
         return jnp.all(state[idx] > 0, axis=-1)
 
+    def stacked_estimate(self, state: jax.Array, rows: jax.Array,
+                         items: jax.Array) -> jax.Array:
+        """Batched membership: query q tests ``items[q]`` against bit
+        vector ``rows[q]`` of the stack [n, bits] in one gather."""
+        idx = hashing.bucket_hash(items, self._seeds(), self.log2_bits)
+        return jnp.all(state[rows[:, None, None], idx] > 0, axis=-1)
+
     def merge(self, a: jax.Array, b: jax.Array) -> jax.Array:
         return jnp.maximum(a, b)
 

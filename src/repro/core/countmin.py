@@ -76,6 +76,15 @@ class CountMin:
         rows = jnp.arange(self.depth)[None, :]
         return jnp.min(state[rows, idx], axis=-1)
 
+    def stacked_estimate(self, state: jax.Array, rows: jax.Array,
+                         items: jax.Array) -> jax.Array:
+        """Batched point queries against a stack [n, d, w]: query q reads
+        row ``rows[q]`` for its own ``items[q]`` — one gather, no per-row
+        state materialization (the red-path twin of stacked_add_batch)."""
+        idx = hashing.bucket_hash(items, self._seeds(), self.log2_width)
+        d_idx = jnp.arange(self.depth)[None, None, :]          # [N, I, d]
+        return jnp.min(state[rows[:, None, None], d_idx, idx], axis=-1)
+
     def merge(self, a: jax.Array, b: jax.Array) -> jax.Array:
         return a + b
 

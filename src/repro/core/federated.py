@@ -75,12 +75,31 @@ def merge_rows(kind: Synopsis, stacked_a: Any, rows_a: jax.Array,
         lambda x, m: x.at[rows_a].set(m), stacked_a, merged)
 
 
-def merge_tree(kind: Synopsis, states: list[Any]) -> Any:
-    """Host-side N-way merge (responsible-site synthesis, Case 3)."""
-    acc = states[0]
-    for s in states[1:]:
-        acc = kind.merge(acc, s)
-    return acc
+def stack_states(states: list[Any]) -> Any:
+    """Stack per-site partial states into one [S, ...] pytree so the
+    responsible-site merge runs as a single jitted program."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+
+def merge_reduce(kind: Synopsis, stacked: Any) -> Any:
+    """N-way merge (responsible-site synthesis, Case 3): reduce a [S, ...]
+    stack of partial states to one merged state with vmapped pairwise
+    merges — ceil(log2 S) merge steps instead of S - 1 sequential ones,
+    all inside the calling program (jit-friendly: S is a static shape).
+    Mergeability makes any reduction order valid."""
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    while n > 1:
+        half = n // 2
+        lo = jax.tree.map(lambda x: x[:half], stacked)
+        hi = jax.tree.map(lambda x: x[half:2 * half], stacked)
+        merged = jax.vmap(kind.merge)(lo, hi)
+        if n % 2:
+            tail = jax.tree.map(lambda x: x[2 * half:], stacked)
+            merged = jax.tree.map(
+                lambda m, t: jnp.concatenate([m, t]), merged, tail)
+        stacked = merged
+        n = half + (n % 2)
+    return jax.tree.map(lambda x: x[0], stacked)
 
 
 def communication_bytes(kind: Synopsis, state: Any) -> int:

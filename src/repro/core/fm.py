@@ -69,6 +69,14 @@ class FMSketch:
         r = jnp.where(all_set, self.bitmap_size, first_unset).astype(jnp.float32)
         return self.nmaps / _PHI * jnp.exp2(jnp.mean(r))
 
+    def stacked_estimate(self, state: jax.Array, rows: jax.Array) -> jax.Array:
+        """PCSA estimate of each requested row of a stack [n, nmaps, bits]."""
+        unset = state[rows] == 0                               # [N, maps, bits]
+        first_unset = jnp.argmax(unset, axis=-1)
+        all_set = ~jnp.any(unset, axis=-1)
+        r = jnp.where(all_set, self.bitmap_size, first_unset).astype(jnp.float32)
+        return self.nmaps / _PHI * jnp.exp2(jnp.mean(r, axis=-1))
+
     def merge(self, a: jax.Array, b: jax.Array) -> jax.Array:
         return jnp.maximum(a, b)
 

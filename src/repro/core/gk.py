@@ -69,6 +69,13 @@ class GKQuantiles:
         idx = jnp.clip((qs * self.m).astype(jnp.int32), 0, self.m - 1)
         return state["values"][idx]
 
+    def stacked_estimate(self, state, rows: jax.Array,
+                         qs: jax.Array) -> jax.Array:
+        """Batched quantile queries: query q reads ``qs[q]`` quantiles of
+        summary row ``rows[q]`` — [N, Q] in one gather."""
+        idx = jnp.clip((qs * self.m).astype(jnp.int32), 0, self.m - 1)
+        return state["values"][rows[:, None], idx]
+
     def rank(self, state, x: jax.Array) -> jax.Array:
         """Approximate rank of x (count of items <= x)."""
         frac = jnp.mean((state["values"] <= x[..., None]).astype(jnp.float32),

@@ -76,6 +76,16 @@ class HyperLogLog:
         lc = m * jnp.log(m / jnp.maximum(zeros, 1.0))
         return jnp.where((raw <= 2.5 * m) & (zeros > 0), lc, raw)
 
+    def stacked_estimate(self, state: jax.Array, rows: jax.Array) -> jax.Array:
+        """Cardinality of each requested row of a register stack [n, m]."""
+        regs = state[rows]                                     # [N, m]
+        m = float(self.m)
+        raw = _alpha(self.m) * m * m / jnp.sum(
+            jnp.exp2(-regs.astype(jnp.float32)), axis=-1)
+        zeros = jnp.sum(regs == 0, axis=-1).astype(jnp.float32)
+        lc = m * jnp.log(m / jnp.maximum(zeros, 1.0))
+        return jnp.where((raw <= 2.5 * m) & (zeros > 0), lc, raw)
+
     def merge(self, a: jax.Array, b: jax.Array) -> jax.Array:
         return jnp.maximum(a, b)
 

@@ -77,6 +77,15 @@ class LossyCounting:
         eq = state["keys"][None, :] == items.astype(jnp.uint32)[:, None]
         return jnp.sum(jnp.where(eq, state["counts"][None, :], 0.0), axis=-1)
 
+    def stacked_estimate(self, state, rows: jax.Array,
+                         items: jax.Array) -> jax.Array:
+        """Batched frequency queries: query q matches ``items[q]`` against
+        the key table of row ``rows[q]`` — [N, I] from one table gather."""
+        keys = state["keys"][rows]                             # [N, k]
+        counts = state["counts"][rows]
+        eq = keys[:, None, :] == items.astype(jnp.uint32)[:, :, None]
+        return jnp.sum(jnp.where(eq, counts[:, None, :], 0.0), axis=-1)
+
     def frequent_items(self, state, min_count: float):
         keep = (state["counts"] - state["error"]) >= min_count
         return state["keys"], state["counts"], keep

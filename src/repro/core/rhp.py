@@ -55,6 +55,13 @@ class RHP:
         return dict(signature=sig, hamming_weight=jnp.sum(sig),
                     bucket=self.bucket_of(sig))
 
+    def stacked_estimate(self, state: jax.Array, rows: jax.Array) -> dict:
+        """Signature/bucket of each requested row of a stack [n, b]
+        (``signature`` and ``bucket_of`` are already batch-generic)."""
+        sig = self.signature(state[rows])                      # [N, b]
+        return dict(signature=sig, hamming_weight=jnp.sum(sig, axis=-1),
+                    bucket=self.bucket_of(sig))
+
     def bucket_of(self, sig: jax.Array) -> jax.Array:
         g = self.bucket_bits
         mult = jnp.asarray([1 << i for i in range(g)], jnp.int32)

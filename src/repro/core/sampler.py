@@ -66,6 +66,13 @@ class ReservoirSampler:
         valid = jnp.arange(self.sample_size) < k
         return dict(values=state["values"], items=state["items"], valid=valid)
 
+    def stacked_estimate(self, state, rows: jax.Array) -> Dict[str, jax.Array]:
+        """Samples of each requested row of the stacked reservoirs."""
+        k = jnp.minimum(state["n_seen"][rows], self.sample_size)   # [N]
+        valid = jnp.arange(self.sample_size)[None, :] < k[:, None]
+        return dict(values=state["values"][rows],
+                    items=state["items"][rows], valid=valid)
+
     def merge(self, a, b):
         """Weighted reservoir merge: slot i keeps a's item with probability
         n_a / (n_a + n_b) — unbiased union sample."""

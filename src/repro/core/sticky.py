@@ -96,6 +96,15 @@ class StickySampling:
         eq = state["keys"][None, :] == items.astype(jnp.uint32)[:, None]
         return jnp.sum(jnp.where(eq, state["counts"][None, :], 0.0), axis=-1)
 
+    def stacked_estimate(self, state, rows: jax.Array,
+                         items: jax.Array) -> jax.Array:
+        """Batched frequency queries over the sampled tables (see
+        LossyCounting.stacked_estimate — same table-gather layout)."""
+        keys = state["keys"][rows]                             # [N, cap]
+        counts = state["counts"][rows]
+        eq = keys[:, None, :] == items.astype(jnp.uint32)[:, :, None]
+        return jnp.sum(jnp.where(eq, counts[:, None, :], 0.0), axis=-1)
+
     def frequent_items(self, state):
         thr = (self.support - self.eps) * state["n_seen"].astype(jnp.float32)
         keep = state["counts"] >= jnp.maximum(thr, 1.0)

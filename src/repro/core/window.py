@@ -66,6 +66,8 @@ class PaneWindow:
                                   jax.tree.map(lambda p: p[i], state["panes"]))
         return acc
 
+    # batched reads need no stacked_estimate here: the vmap fallback in
+    # batched.stacked_estimate merges panes + estimates per gathered row
     def estimate(self, state, *args):
         return self.kind.estimate(self.merged(state), *args)
 

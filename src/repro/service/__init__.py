@@ -1,10 +1,11 @@
 # SDE-as-a-Service: the always-on engine, its JSON API and the
 # accuracy-budget workflow planner (paper Sections 3, 4, 7).
 from .api import (Request, Response, parse_request, BuildSynopsis,
-                  StopSynopsis, LoadSynopsis, AdHocQuery, StatusReport)
+                  StopSynopsis, LoadSynopsis, AdHocQuery, QueryMany,
+                  StatusReport)
 from .engine import SDE, Federation
 from .planner import Planner, WorkflowSpec
 
 __all__ = ["Request", "Response", "parse_request", "BuildSynopsis",
-           "StopSynopsis", "LoadSynopsis", "AdHocQuery", "StatusReport",
-           "SDE", "Federation", "Planner", "WorkflowSpec"]
+           "StopSynopsis", "LoadSynopsis", "AdHocQuery", "QueryMany",
+           "StatusReport", "SDE", "Federation", "Planner", "WorkflowSpec"]

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 
 @dataclasses.dataclass
@@ -57,6 +57,18 @@ class AdHocQuery(Request):
 
 
 @dataclasses.dataclass
+class QueryMany(Request):
+    """Answer many ad-hoc queries in one request (SDEaaS batched red path).
+
+    Each entry of ``queries`` is ``{"synopsis_id": ..., "query": {...}}``;
+    the engine groups them by synopsis kind and evaluates every group with
+    a single jitted stacked-estimate dispatch. The response ``value`` is
+    the list of per-query response dicts in request order.
+    """
+    queries: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
 class StatusReport(Request):
     pass
 
@@ -91,6 +103,7 @@ _KINDS = {
     "stop": StopSynopsis,
     "load": LoadSynopsis,
     "adhoc": AdHocQuery,
+    "query_many": QueryMany,
     "status": StatusReport,
 }
 

@@ -15,6 +15,7 @@ from typing import Dict, List, Sequence
 
 import numpy as np
 
+from . import api
 from .engine import SDE
 
 
@@ -33,14 +34,22 @@ class Placement:
 
 def estimate_workload(sde: SDE, hll_id: str, cm_id: str,
                       candidate_streams: Sequence[int]):
-    """Query the engine's synopses: (#active streams, per-stream load)."""
-    n_active = float(sde.handle(
-        {"type": "adhoc", "request_id": "wl-n",
-         "synopsis_id": hll_id}).value)
-    freqs = sde.handle(
-        {"type": "adhoc", "request_id": "wl-f", "synopsis_id": cm_id,
-         "query": {"items": [int(s) for s in candidate_streams]}}).value
-    return n_active, np.asarray(freqs, np.float64)
+    """Query the engine's synopses — (#active streams, per-stream load) —
+    through the batched red path: one ``query_many`` call, one jitted
+    stacked-estimate dispatch per kind touched (the per-stream CM loads
+    are a single [1, n_candidates] point-query batch)."""
+    for sid in (hll_id, cm_id):
+        if sid not in sde.entries:
+            raise KeyError(f"unknown synopsis {sid!r}")
+    q_n, q_f = sde.query_many([
+        api.AdHocQuery(request_id="wl-n", synopsis_id=hll_id),
+        api.AdHocQuery(request_id="wl-f", synopsis_id=cm_id,
+                       query={"items": [int(s) for s in candidate_streams]}),
+    ])
+    for q in (q_n, q_f):
+        if not q.ok:
+            raise ValueError(q.error)   # e.g. uncoercible candidate ids
+    return float(q_n.value), np.asarray(q_f.value, np.float64)
 
 
 def worst_fit_decreasing(stream_ids: Sequence[int],

@@ -7,12 +7,16 @@ Structure mirrors the paper's architecture, adapted to JAX:
     synopsis *kind* updates every synopsis of that kind (stacked state =
     slot sharing). Routing tables (stream -> row) are device int32 arrays,
     the analogue of RegisterSynopsis/HashData key creation.
-  * red path   : ``handle(request_json)`` — queries read the same state
-    through separate jitted estimate functions; they never enter (or
-    back-pressure) the update path.
+  * red path   : ``handle(request_json)`` / ``query_many(requests)`` —
+    queries read the same stacked state in place through ONE cached jitted
+    stacked-estimate program per kind (``kernels.ops.estimate_all``): N
+    ad-hoc queries against a kind are one dispatch, and all continuous
+    queries of a kind are re-evaluated per ingest batch in one program.
+    Queries never enter (or back-pressure) the update path.
   * yellow path: federated synopses — ``Federation`` keeps one SDE per
-    site and synthesizes global estimates at the responsible site via
-    ``core.federated.merge_tree`` (collective mergeability).
+    site and synthesizes global estimates at the responsible site with
+    ``kernels.ops.estimate_merged`` (``core.federated.merge_reduce`` +
+    estimate fused into one program — collective mergeability).
 
 Capacity management: kind stacks grow by doubling (amortized re-jit),
 "a request for a new synopsis assigns new tasks, not task slots".
@@ -22,7 +26,7 @@ from __future__ import annotations
 import dataclasses
 import importlib
 import json
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +36,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro import core
 from repro.core import batched, federated
 from repro.core.synopsis import Synopsis, kind_params
+from repro.kernels import ops as kops
 from repro.sharding import specs
 from . import api
 
@@ -103,6 +108,21 @@ class _KindStack:
         self.source_rows.append(row)
         self._source_mask = None
 
+    def out_sharding(self) -> Optional[NamedSharding]:
+        """Replicate the (small) estimate outputs of a red-path dispatch
+        when the stack is mesh-sharded; None off-mesh."""
+        if self.mesh is None or self.mesh.empty:
+            return None
+        return NamedSharding(self.mesh, P())
+
+    def row_bytes(self) -> int:
+        """Actual device bytes of ONE row slice of the stacked state — the
+        per-synopsis footprint. ``kind.memory_bytes()`` reports the
+        abstract sketch size, which drifts from the stacked dtypes (e.g.
+        Bloom bits are int32 lanes here, not packed bits)."""
+        return sum((x.size // self.capacity) * x.dtype.itemsize
+                   for x in jax.tree.leaves(self.state))
+
     def alloc(self) -> int:
         for i, u in enumerate(self.used):
             if not u:
@@ -160,6 +180,10 @@ class SDE:
         self.entries: Dict[str, _Entry] = {}
         self.continuous_out: List[api.Response] = []
         self.tuples_ingested = 0
+        # continuous queries grouped by kind: {kind: (ids, rows)} — rebuilt
+        # lazily after any lifecycle change so _emit_continuous issues one
+        # stacked-estimate dispatch per kind, not one gather per entry
+        self._cq_groups: Optional[Dict[Any, Any]] = None
 
     def _new_stack(self, kind: Synopsis, capacity: int = 64) -> _KindStack:
         return _KindStack(kind, capacity, mesh=self.mesh, rules=self.rules)
@@ -178,6 +202,8 @@ class SDE:
                 return self._load(req)
             if isinstance(req, api.AdHocQuery):
                 return self._query(req)
+            if isinstance(req, api.QueryMany):
+                return self._query_many_req(req)
             if isinstance(req, api.StatusReport):
                 return self._status(req)
             raise ValueError(f"unhandled request {req}")
@@ -192,6 +218,14 @@ class SDE:
 
     def _build(self, req: api.BuildSynopsis) -> api.Response:
         kind = core.make_kind(req.kind, **req.params)
+        # validate EVERY routed stream id before any allocation: a failed
+        # build must not commit partial entries (the routing scatter would
+        # otherwise silently clamp out-of-range ids onto the table's last
+        # slot and corrupt another stream's route)
+        if req.per_stream_of_source:
+            _check_stream_id(req.n_streams - 1 if req.n_streams else None)
+        else:
+            _check_stream_id(req.stream_id)
         stack = self.stacks.get(kind)
         if stack is None:
             cap = 64
@@ -220,6 +254,7 @@ class SDE:
                 add_one(sid, f"{req.synopsis_id}/{sid}")
         else:
             add_one(req.stream_id, req.synopsis_id)
+        self._cq_groups = None
         return api.Response(request_id=req.request_id,
                             synopsis_id=req.synopsis_id,
                             params=kind_params(kind))
@@ -236,6 +271,7 @@ class SDE:
             freed.setdefault(e.kind_key, []).append(e.row)
         for kind, rows in freed.items():
             self.stacks[kind].free_rows(rows)
+        self._cq_groups = None
         return api.Response(request_id=req.request_id,
                             synopsis_id=req.synopsis_id, value=len(ids))
 
@@ -247,21 +283,84 @@ class SDE:
         return api.Response(request_id=req.request_id, value=req.kind_name)
 
     def _query(self, req: api.AdHocQuery) -> api.Response:
-        e = self.entries.get(req.synopsis_id)
-        if e is None:
-            return api.Response(request_id=req.request_id, ok=False,
-                                error=f"unknown synopsis {req.synopsis_id!r}")
-        val = self._estimate_entry(e, req.query)
-        return api.Response(request_id=req.request_id,
-                            synopsis_id=req.synopsis_id, value=val,
-                            params=kind_params(e.kind_key))
+        return self.query_many([req])[0]
+
+    def query_many(self, requests: Sequence[api.AdHocQuery]
+                   ) -> List[api.Response]:
+        """Answer N ad-hoc queries with ONE jitted stacked-estimate
+        dispatch per kind touched (the batched red path, paper Fig. 8):
+        queries are grouped by kind, their args batched into padded device
+        arrays, and each group reads the `synopsis`-sharded stack state in
+        place — no per-query host round trip."""
+        responses: List[Optional[api.Response]] = [None] * len(requests)
+        groups: Dict[Any, List[int]] = {}
+        for i, req in enumerate(requests):
+            e = self.entries.get(req.synopsis_id)
+            if e is None:
+                responses[i] = api.Response(
+                    request_id=req.request_id, ok=False,
+                    error=f"unknown synopsis {req.synopsis_id!r}")
+            elif req.query is not None and not isinstance(req.query, dict):
+                # fails alone — never poisons the rest of the batch
+                responses[i] = api.Response(
+                    request_id=req.request_id, ok=False,
+                    error="query must be an object, got "
+                          f"{type(req.query).__name__}")
+            else:
+                groups.setdefault(e.kind_key, []).append(i)
+        for kind, idxs in groups.items():
+            stack = self.stacks[kind]
+            rows = [self.entries[requests[i].synopsis_id].row for i in idxs]
+            vals, errs = self._estimate_rows(
+                kind, stack, rows, [requests[i].query or {} for i in idxs])
+            for i, val, err in zip(idxs, vals, errs):
+                if err is not None:
+                    responses[i] = api.Response(
+                        request_id=requests[i].request_id,
+                        synopsis_id=requests[i].synopsis_id,
+                        ok=False, error=err)
+                else:
+                    responses[i] = api.Response(
+                        request_id=requests[i].request_id,
+                        synopsis_id=requests[i].synopsis_id, value=val,
+                        params=kind_params(kind))
+        return responses
+
+    def _query_many_req(self, req: api.QueryMany) -> api.Response:
+        subs: List[Optional[api.AdHocQuery]] = []
+        prefail: Dict[int, api.Response] = {}
+        for i, q in enumerate(req.queries):
+            rid = f"{req.request_id}/{i}"
+            if isinstance(q, dict):
+                # pass the query field through untouched (no `or {}`):
+                # query_many rejects non-dict values uniformly, including
+                # falsy ones like 0 or ""
+                subs.append(api.AdHocQuery(
+                    request_id=rid, synopsis_id=q.get("synopsis_id", ""),
+                    query=q["query"] if "query" in q else {}))
+            else:
+                # a malformed entry fails alone; the rest of the batch runs
+                prefail[i] = api.Response(
+                    request_id=rid, ok=False,
+                    error="query entry must be an object, got "
+                          f"{type(q).__name__}")
+                subs.append(None)
+        answered = iter(self.query_many([s for s in subs if s is not None]))
+        rs = [prefail[i] if s is None else next(answered)
+              for i, s in enumerate(subs)]
+        n_fail = sum(1 for r in rs if not r.ok)
+        return api.Response(request_id=req.request_id, ok=n_fail == 0,
+                            error=(f"{n_fail}/{len(rs)} queries failed"
+                                   if n_fail else ""),
+                            value=[dataclasses.asdict(r) for r in rs])
 
     def _status(self, req: api.StatusReport) -> api.Response:
+        per_row = {k: s.row_bytes() for k, s in self.stacks.items()}
         info = {
             sid: dict(kind=type(e.kind_key).__name__,
                       params=kind_params(e.kind_key),
                       stream=e.stream_id, federated=e.federated,
-                      memory_bytes=e.kind_key.memory_bytes())
+                      memory_bytes=per_row[e.kind_key])
             for sid, e in self.entries.items()}
         return api.Response(request_id=req.request_id, value=info)
 
@@ -277,6 +376,12 @@ class SDE:
         t = len(stream_ids)
         if mask is None:
             mask = np.ones(t, bool)
+        # drop tuples whose stream id the routing table cannot hold: the
+        # route gather would clamp them onto the last slot and credit
+        # them to whatever synopsis lives there (same corruption _build
+        # guards against)
+        sid_arr = np.asarray(stream_ids)
+        mask = mask & (sid_arr >= 0) & (sid_arr < _MAX_STREAMS)
         self.tuples_ingested += int(mask.sum())
         sids = jnp.asarray(stream_ids.astype(np.int32))
         items = jnp.asarray(stream_ids.astype(np.uint32))
@@ -303,17 +408,51 @@ class SDE:
                                 stack.route, sids, vals, msk)
 
     def _emit_continuous(self):
-        for sid, e in self.entries.items():
-            if e.continuous:
+        """Evaluate ALL continuous queries of a kind per ingest batch in a
+        single stacked-estimate program — no per-entry row gather. The
+        padded rows array, planned (default) args and output sharding are
+        byte-identical between lifecycle changes, so they are cached with
+        the grouping: per-ingest host work is O(1) plus the dispatch."""
+        if self._cq_groups is None:
+            self._cq_groups = self._plan_continuous()
+        for kind, (ids, rows_dev, args, take, out_sh) in \
+                self._cq_groups.items():
+            out = kops.estimate_all(kind, self.stacks[kind].state,
+                                    rows_dev, *args, out_sharding=out_sh)
+            out = jax.tree.map(np.asarray, out)
+            for i, sid in enumerate(ids):
                 self.continuous_out.append(api.Response(
                     request_id=f"cq/{sid}/{self.tuples_ingested}",
-                    synopsis_id=sid, value=self._estimate_entry(e, {})))
+                    synopsis_id=sid, value=take(out, i)))
+
+    def _plan_continuous(self) -> Dict[Any, Any]:
+        by_kind: Dict[Any, List[Any]] = {}
+        for sid, e in self.entries.items():
+            if e.continuous:
+                by_kind.setdefault(e.kind_key, []).append((sid, e.row))
+        groups: Dict[Any, Any] = {}
+        for kind, members in by_kind.items():
+            ids = [sid for sid, _ in members]
+            rows_arr = _pad_rows([row for _, row in members])
+            args, take, _ = _plan_queries(kind, [{}] * len(rows_arr))
+            groups[kind] = (ids, jnp.asarray(rows_arr), args, take,
+                            self.stacks[kind].out_sharding())
+        return groups
 
     # ------------------------------------------------------------------
-    def _estimate_entry(self, e: _Entry, query: Dict[str, Any]):
-        stack = self.stacks[e.kind_key]
-        state = batched.stacked_row(stack.state, e.row)
-        return _estimate(e.kind_key, state, query)
+    def _estimate_rows(self, kind, stack: _KindStack, rows: Sequence[int],
+                       queries: Sequence[Dict[str, Any]]):
+        """Answer ``len(rows)`` queries against one kind stack with ONE
+        jitted dispatch. Rows and per-query args are padded to the next
+        power of two so repeated batch sizes reuse the cached program."""
+        n = len(rows)
+        rows_arr = _pad_rows(rows)
+        args, take, errors = _plan_queries(
+            kind, list(queries) + [{}] * (len(rows_arr) - n))
+        out = kops.estimate_all(kind, stack.state, jnp.asarray(rows_arr),
+                                *args, out_sharding=stack.out_sharding())
+        out = jax.tree.map(np.asarray, out)
+        return [take(out, i) for i in range(n)], errors[:n]
 
     def state_of(self, synopsis_id: str):
         e = self.entries[synopsis_id]
@@ -435,6 +574,7 @@ class SDE:
                 stack.route = stack.route.at[oe.stream_id].set(row)
             self.entries[sid] = dataclasses.replace(oe, row=row)
         self.tuples_ingested += other.tuples_ingested
+        self._cq_groups = None
 
 
 def _json_params(params):
@@ -515,20 +655,74 @@ def _step_all(kind, sharding, state, route, sids, vals, msk):
     return _step_fn(kind, sharding)(state, route, sids, vals, msk)
 
 
-def _estimate(kind, state, query: Dict[str, Any]):
-    q = dict(query)
-    if isinstance(kind, (core.CountMin, core.LossyCounting,
-                         core.StickySampling)):
-        items = jnp.asarray(np.asarray(q.get("items", [0]), np.uint32))
-        return np.asarray(kind.estimate(state, items))
-    if isinstance(kind, core.BloomFilter):
-        items = jnp.asarray(np.asarray(q.get("items", [0]), np.uint32))
-        return np.asarray(kind.estimate(state, items))
+# ---------------------------------------------------------------------------
+# red-path query planning: normalize N query dicts for one kind into padded
+# batched device args + a per-query result slicer. Kinds taking per-query
+# ``items`` (CM, Bloom, Lossy, Sticky) or ``qs`` (GK) get ONE [N, L] arg
+# (L = padded max arg length); every other kind is arg-free and returns its
+# full estimation pytree per row.
+# ---------------------------------------------------------------------------
+
+_ITEM_KINDS = (core.CountMin, core.BloomFilter, core.LossyCounting,
+               core.StickySampling)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+def _pad_rows(rows: Sequence[int]) -> np.ndarray:
+    """Pad a row-index batch to the next power of two (padding rows point
+    at row 0 — reads are side-effect free — and their results are sliced
+    off) so repeated batch sizes reuse one compiled program."""
+    padded = np.zeros((_next_pow2(len(rows)),), np.int32)
+    padded[:len(rows)] = rows
+    return padded
+
+
+def _check_stream_id(sid: Optional[int]) -> None:
+    """Reject stream ids the routing table cannot hold. None (data-source
+    synopses) is always valid."""
+    if sid is not None and not (0 <= int(sid) < _MAX_STREAMS):
+        raise ValueError(
+            f"stream id {sid} outside the routing table "
+            f"[0, {_MAX_STREAMS}); re-key the stream or raise "
+            "_MAX_STREAMS (hashed routing is the planned fix)")
+
+
+def _plan_queries(kind, queries: Sequence[Dict[str, Any]]):
+    """Returns ``(args, take, errors)``: ``args`` are the batched device
+    arrays to pass to ``kernels.ops.estimate_all`` after the rows
+    argument, ``take(out, i)`` slices query ``i``'s value out of the
+    (host-side) batched output — dropping arg padding for argful kinds —
+    and ``errors[i]`` is an error string when query ``i``'s args failed
+    to coerce (that query gets default args so ONE bad query never
+    poisons the rest of the batch)."""
+    errors: List[Optional[str]] = [None] * len(queries)
     if isinstance(kind, core.GKQuantiles):
-        qs = jnp.asarray(np.asarray(q.get("qs", [0.5]), np.float32))
-        return np.asarray(kind.estimate(state, qs))
-    out = kind.estimate(state)
-    return jax.tree.map(np.asarray, out)
+        key, default, np_dtype = "qs", [0.5], np.float32
+    elif isinstance(kind, _ITEM_KINDS):
+        key, default, np_dtype = "items", [0], np.uint32
+    else:
+        def take(out, i):
+            return jax.tree.map(lambda x: x[i], out)
+        return (), take, errors
+    lists = []
+    for i, q in enumerate(queries):
+        try:
+            lists.append(np.asarray(q.get(key, default), np_dtype).ravel())
+        except (TypeError, ValueError, OverflowError) as e:
+            lists.append(np.asarray(default, np_dtype).ravel())
+            errors[i] = f"bad {key!r} in query: {e!r}"
+    lens = [len(lst) for lst in lists]
+    width = _next_pow2(max(max(lens), 1))
+    arg = np.zeros((len(queries), width), np_dtype)
+    for i, lst in enumerate(lists):
+        arg[i, :len(lst)] = lst
+
+    def take(out, i):
+        return out[i, :lens[i]]
+    return (jnp.asarray(arg),), take, errors
 
 
 # ---------------------------------------------------------------------------
@@ -549,7 +743,10 @@ class Federation:
     def query_federated(self, synopsis_id: str, query: Dict[str, Any],
                         responsible: str):
         """Case 2/3: ship partial synopses to the responsible site, merge
-        (mergeability), estimate once."""
+        (mergeability), estimate once — the tree merge and the estimate
+        are fused into ONE jitted program (``kernels.ops.estimate_merged``)
+        riding the same stacked-estimate entry point as the local red
+        path."""
         states, kind = [], None
         for sde in self.sdes.values():
             if synopsis_id in sde.entries:
@@ -557,8 +754,12 @@ class Federation:
                 states.append(sde.state_of(synopsis_id))
         if kind is None:
             raise KeyError(synopsis_id)
-        merged = federated.merge_tree(kind, states)
-        return _estimate(kind, merged, query)
+        args, take, errors = _plan_queries(kind, [query or {}])
+        if errors[0] is not None:
+            raise ValueError(errors[0])
+        out = kops.estimate_merged(kind, federated.stack_states(states),
+                                   *args)
+        return take(jax.tree.map(np.asarray, out), 0)
 
     def query_bytes(self, synopsis_id: str) -> int:
         total = 0

@@ -79,6 +79,21 @@ class Planner:
         return min(feasible, key=lambda p: p.cost)
 
 
+def spec_from_engine(sde, hll_id: str, cm_id: str,
+                     candidate_streams, **overrides) -> WorkflowSpec:
+    """Calibrate the cost model from a LIVE engine's synopses with one
+    batched red-path call (the paper's 'SDE as a cost estimator'): the
+    HLL supplies n_streams, the CM point-query batch supplies the update
+    volume. ``overrides`` pin any spec field the workflow fixes."""
+    from .balancer import estimate_workload
+    n_active, loads = estimate_workload(sde, hll_id, cm_id,
+                                        candidate_streams)
+    fields = dict(n_streams=max(1, int(round(n_active))),
+                  updates_per_batch=max(1, int(loads.sum())))
+    fields.update(overrides)
+    return WorkflowSpec(**fields)
+
+
 def _dft_error(s: WorkflowSpec) -> float:
     # truncation keeps >= the energy in the first F of w/2 unique coeffs;
     # for near-threshold pairs the bias is bounded by the discarded mass.
