@@ -19,6 +19,10 @@ def main():
 
     # 1. Build synopses on-the-fly (paper Section 3: Build Synopsis).
     #    One request maintains a CountMin per stock for 500 stocks.
+    #    Stream ids are ARBITRARY non-negative ints (< 2**63): routing is
+    #    hashed, so 64-bit hashed user ids / sensor UUIDs work as-is —
+    #    no re-keying to a dense range. Pass `stream_ids=[...]` on a
+    #    per-stream build to cover a sparse/hashed id population.
     for req in [
         {"type": "build", "request_id": "r1", "synopsis_id": "bids",
          "kind": "countmin", "params": {"eps": 0.01, "delta": 0.05},

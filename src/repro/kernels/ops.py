@@ -35,6 +35,52 @@ def _pad_to(x: jax.Array, mult: int, axis: int = 0, value=0):
     return jnp.pad(x, pad, constant_values=value)
 
 
+# ---------------------------------------------------------------------------
+# blue path: hashed stream routing. The engine keeps each kind stack's
+# stream->row map in an open-addressing hash table (service/routing.py
+# owns the host-side inserts); this is the device half — a vectorized
+# fixed-bound linear probe traced INSIDE the fused update programs, so
+# routing arbitrary 63-bit stream ids still costs zero extra dispatches.
+# ---------------------------------------------------------------------------
+
+_ROUTE_GOLDEN = jnp.uint32(0x9E3779B9)
+_ROUTE_EMPTY_HI = jnp.uint32(0xFFFFFFFF)   # hi half of an empty slot; valid
+                                           # ids < 2**63 have hi <= 2**31-1
+
+
+def route_probe(keys_lo: jax.Array, keys_hi: jax.Array, rows: jax.Array,
+                sid_lo: jax.Array, sid_hi: jax.Array, *,
+                n_probe: int) -> jax.Array:
+    """Rows for a batch of stream ids via linear probing: ``-1`` for
+    unrouted ids. Keys are stored as uint32 (lo, hi) halves so the probe
+    needs no 64-bit lanes; ``n_probe`` is the static trip count (the
+    table's longest insert displacement, pow2-rounded by the engine so
+    retraces stay bounded). The probe is a ``fori_loop`` gather chain —
+    plain jnp, fusable into the caller's single blue-path dispatch. The
+    slot hash must stay in lockstep with ``service.routing.slot_hash``.
+    """
+    size_mask = jnp.int32(keys_lo.shape[0] - 1)
+    sid_lo = sid_lo.astype(jnp.uint32)
+    sid_hi = sid_hi.astype(jnp.uint32)
+    h = hashing.mix32(sid_lo ^ hashing.mix32(sid_hi ^ _ROUTE_GOLDEN))
+    slot0 = (h & size_mask.astype(jnp.uint32)).astype(jnp.int32)
+
+    def body(_, carry):
+        row, slot, done = carry
+        k_hi = keys_hi[slot]
+        hit = (keys_lo[slot] == sid_lo) & (k_hi == sid_hi)
+        empty = k_hi == _ROUTE_EMPTY_HI
+        row = jnp.where(hit & ~done, rows[slot], row)
+        done = done | hit | empty
+        slot = jnp.where(done, slot, (slot + 1) & size_mask)
+        return row, slot, done
+
+    row0 = jnp.full(sid_lo.shape, -1, jnp.int32)
+    done0 = jnp.zeros(sid_lo.shape, bool)
+    row, _, _ = jax.lax.fori_loop(0, n_probe, body, (row0, slot0, done0))
+    return row
+
+
 def _source_fold(out: jax.Array, idx: jax.Array, contrib: jax.Array,
                  source_rows: jax.Array) -> jax.Array:
     """Add a fresh single sketch into the data-source rows: out [n, d, w]

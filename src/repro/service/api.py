@@ -21,8 +21,13 @@ class BuildSynopsis(Request):
     """Create (or start maintaining) a synopsis on-the-fly.
 
     stream_id: single-stream synopsis target; None => data-source synopsis.
+      Stream ids are ARBITRARY non-negative 63-bit ints (hashed user ids,
+      sensor UUIDs, ...) — routing is hashed, there is no dense-table
+      range cap and no re-keying requirement.
     per_stream_of_source: one synopsis per stream of the source with a
-      single request (paper: 'a sample per stock ... single request').
+      single request (paper: 'a sample per stock ... single request');
+      covers streams ``range(n_streams)``, or exactly ``stream_ids``
+      when that list is given (sparse / hashed id populations).
     """
     synopsis_id: str = ""
     kind: str = "countmin"
@@ -30,7 +35,8 @@ class BuildSynopsis(Request):
     stream_id: Optional[int] = None
     source_id: Optional[str] = None
     per_stream_of_source: bool = False
-    n_streams: int = 0                    # hint for per-stream builds
+    n_streams: int = 0                    # per-stream builds: id range size
+    stream_ids: Optional[List[int]] = None  # per-stream builds: explicit ids
     parallelism: int = 1                  # requested degree (data-source)
     scheme: str = "partition"             # partition | round_robin
     federated: bool = False

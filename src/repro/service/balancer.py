@@ -37,7 +37,10 @@ def estimate_workload(sde: SDE, hll_id: str, cm_id: str,
     """Query the engine's synopses — (#active streams, per-stream load) —
     through the batched red path: one ``query_many`` call, one jitted
     stacked-estimate dispatch per kind touched (the per-stream CM loads
-    are a single [1, n_candidates] point-query batch)."""
+    are a single [1, n_candidates] point-query batch). Candidate stream
+    ids are arbitrary 63-bit ints: the engine folds item ids exactly the
+    way ingest folds stream ids, so hashed id populations balance the
+    same as dense ones."""
     for sid in (hll_id, cm_id):
         if sid not in sde.entries:
             raise KeyError(f"unknown synopsis {sid!r}")

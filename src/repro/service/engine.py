@@ -5,8 +5,11 @@ Structure mirrors the paper's architecture, adapted to JAX:
 
   * blue path  : ``ingest(stream_ids, values)`` — ONE jitted update per
     synopsis *kind* updates every synopsis of that kind (stacked state =
-    slot sharing). Routing tables (stream -> row) are device int32 arrays,
-    the analogue of RegisterSynopsis/HashData key creation.
+    slot sharing). Stream routing (stream -> row) is a hashed open-
+    addressing table (``service/routing.py``): stream ids are arbitrary
+    63-bit ints, and the linear probe runs INSIDE the fused program
+    (``kernels.ops.route_probe``), the analogue of
+    RegisterSynopsis/HashData key creation.
   * red path   : ``handle(request_json)`` / ``query_many(requests)`` —
     queries read the same stacked state in place through ONE cached jitted
     stacked-estimate program per kind (``kernels.ops.estimate_all``): N
@@ -19,7 +22,8 @@ Structure mirrors the paper's architecture, adapted to JAX:
     estimate fused into one program — collective mergeability).
 
 Capacity management: kind stacks grow by doubling (amortized re-jit),
-"a request for a new synopsis assigns new tasks, not task slots".
+"a request for a new synopsis assigns new tasks, not task slots"; the
+routing tables grow-and-rehash independently of stack capacity.
 """
 from __future__ import annotations
 
@@ -38,9 +42,11 @@ from repro.core import batched, federated
 from repro.core.synopsis import Synopsis, kind_params
 from repro.kernels import ops as kops
 from repro.sharding import specs
-from . import api
+from . import api, routing
 
-_MAX_STREAMS = 1 << 16       # routing-table size (stream-id space)
+# dense route size of pre-hashed-routing snapshots (the old _MAX_STREAMS);
+# restore migrates these into a RouteTable
+_LEGACY_ROUTE_SLOTS = 1 << 16
 
 
 @dataclasses.dataclass
@@ -56,11 +62,12 @@ class _Entry:
 
 
 class _KindStack:
-    """All synopses of one kind: stacked state + routing table.
+    """All synopses of one kind: stacked state + hashed routing table.
 
     On a multi-device mesh the stacked state's leading [capacity] row
     axis is partitioned over the ``synopsis`` logical axis (horizontal
-    scale-out, paper Fig. 5); the routing table is replicated.
+    scale-out, paper Fig. 5); the routing table's device mirror is
+    replicated (like the old dense route array).
     """
 
     def __init__(self, kind: Synopsis, capacity: int = 64,
@@ -71,11 +78,14 @@ class _KindStack:
         self.mesh = mesh
         self.rules = rules or specs.DEFAULT_RULES
         self.state = batched.stacked_init(kind, capacity)
-        self.route = jnp.full((_MAX_STREAMS,), -1, jnp.int32)  # stream->row
+        self.table = routing.RouteTable()  # stream id -> row (host side)
         self.source_rows: List[int] = []   # rows fed by ALL tuples
         self.used: List[bool] = [False] * capacity
         self.is_timeseries = hasattr(kind, "step")
-        self._source_mask = None           # device cache, see source_mask()
+        self._source_idx = None            # device cache, source_rows_idx()
+        self._free: Optional[List[int]] = None   # alloc free list (lazy)
+        self._dev_table = None             # device mirror of self.table
+        self._dev_table_version = -1
         self._place()
 
     @property
@@ -85,13 +95,37 @@ class _KindStack:
         return specs.stack_sharding(self.rules, self.mesh, self.capacity)
 
     def _place(self):
-        """Pin state rows over the synopsis axis, replicate the route."""
+        """Pin state rows over the synopsis axis (the routing table's
+        device mirror is placed lazily by ``device_table``)."""
         sh = self.sharding
         if sh is None:
             return
         self.state = jax.tree.map(lambda x: jax.device_put(x, sh), self.state)
-        self.route = jax.device_put(
-            self.route, NamedSharding(self.mesh, P()))
+
+    def device_table(self):
+        """(keys_lo, keys_hi, rows) device mirror of the routing table —
+        the arrays ``kernels.ops.route_probe`` gathers from inside the
+        fused programs. Rebuilt only when the host table mutated
+        (build/stop/merge — the rare path); replicated on a mesh."""
+        if (self._dev_table is None
+                or self._dev_table_version != self.table.version):
+            lo, hi = routing.split64(self.table.keys)
+            arrs = (lo, hi, self.table.rows)
+            if self.mesh is not None and not self.mesh.empty:
+                rep = NamedSharding(self.mesh, P())
+                self._dev_table = tuple(
+                    jax.device_put(a, rep) for a in arrs)
+            else:
+                self._dev_table = tuple(jnp.asarray(a) for a in arrs)
+            self._dev_table_version = self.table.version
+        return self._dev_table
+
+    @property
+    def n_probe(self) -> int:
+        """Static probe bound for the fused programs: the table's longest
+        insert displacement, pow2-rounded so jit retraces are bounded by
+        log(PROBE_CAP) distinct values, not one per table state."""
+        return _next_pow2(self.table.max_probe)
 
     def source_rows_idx(self) -> Optional[jax.Array]:
         """int32 index vector of data-source rows; None when there are
@@ -99,14 +133,14 @@ class _KindStack:
         trace time). Cached on device; invalidated on lifecycle changes."""
         if not self.source_rows:
             return None
-        if self._source_mask is None:
-            self._source_mask = jnp.asarray(
+        if self._source_idx is None:
+            self._source_idx = jnp.asarray(
                 np.asarray(self.source_rows, np.int32))
-        return self._source_mask
+        return self._source_idx
 
     def mark_source(self, row: int):
         self.source_rows.append(row)
-        self._source_mask = None
+        self._source_idx = None
 
     def out_sharding(self) -> Optional[NamedSharding]:
         """Replicate the (small) estimate outputs of a red-path dispatch
@@ -124,18 +158,22 @@ class _KindStack:
                    for x in jax.tree.leaves(self.state))
 
     def alloc(self) -> int:
-        for i, u in enumerate(self.used):
-            if not u:
-                self.used[i] = True
-                return i
-        old_cap = self.capacity
-        self.capacity *= 2
-        self.state = batched.grow(self.kind, self.state, self.capacity)
-        self.used.extend([False] * old_cap)
-        self.used[old_cap] = True
-        self._source_mask = None
-        self._place()
-        return old_cap
+        """Hand out the lowest free row (free-list backed: a 1M-stream
+        per-source build is 1M O(1) pops, not 1M O(capacity) scans)."""
+        if self._free is None:
+            self._free = [i for i, u in enumerate(self.used)
+                          if not u][::-1]
+        if not self._free:
+            old_cap = self.capacity
+            self.capacity *= 2
+            self.state = batched.grow(self.kind, self.state, self.capacity)
+            self.used.extend([False] * old_cap)
+            self._free = list(range(self.capacity - 1, old_cap - 1, -1))
+            self._source_idx = None
+            self._place()
+        row = self._free.pop()
+        self.used[row] = True
+        return row
 
     def free(self, row: int):
         self.free_rows([row])
@@ -145,14 +183,18 @@ class _KindStack:
         these slots must hand out fresh synopses, not the dead ones'
         counts (freed-row reuse corruption). Batched — stopping a
         per-stream group of thousands is ONE scatter, not one full-state
-        copy per row."""
+        copy per row. The routing table compacts by re-insert
+        (tombstone-free), and the source-row index cache is ALWAYS
+        dropped so a stopped data-source row cannot keep absorbing
+        tuples through a stale cached vector."""
         for row in rows:
             self.used[row] = False
             if row in self.source_rows:
                 self.source_rows.remove(row)
-                self._source_mask = None
+        self._source_idx = None
+        self._free = None
+        self.table.remove_rows(np.asarray(rows, np.int32))
         idx = jnp.asarray(rows, jnp.int32)
-        self.route = jnp.where(jnp.isin(self.route, idx), -1, self.route)
         fresh = batched.stacked_init(self.kind, len(rows))
         self.state = jax.tree.map(
             lambda x, f: x.at[idx].set(f), self.state, fresh)
@@ -180,6 +222,7 @@ class SDE:
         self.entries: Dict[str, _Entry] = {}
         self.continuous_out: List[api.Response] = []
         self.tuples_ingested = 0
+        self.batches_ingested = 0   # monotonic; keys continuous responses
         # continuous queries grouped by kind: {kind: (ids, rows)} — rebuilt
         # lazily after any lifecycle change so _emit_continuous issues one
         # stacked-estimate dispatch per kind, not one gather per entry
@@ -219,22 +262,30 @@ class SDE:
     def _build(self, req: api.BuildSynopsis) -> api.Response:
         kind = core.make_kind(req.kind, **req.params)
         # validate EVERY routed stream id before any allocation: a failed
-        # build must not commit partial entries (the routing scatter would
-        # otherwise silently clamp out-of-range ids onto the table's last
-        # slot and corrupt another stream's route)
+        # build must not commit partial entries. Ids are arbitrary 63-bit
+        # ints (hashed routing) — only unrepresentable ids (negative or
+        # >= 2**63) are rejected.
         if req.per_stream_of_source:
-            _check_stream_id(req.n_streams - 1 if req.n_streams else None)
+            sid_list = (req.stream_ids if req.stream_ids is not None
+                        else range(req.n_streams))
+            for sid in sid_list:
+                _check_stream_id(sid)
+            # canonicalize + dedupe: the entry id (f"{syn}/{sid}") and the
+            # routed key must agree, or non-canonical forms (7.0 vs 7)
+            # would commit shadow entries that never receive updates
+            sid_list = list(dict.fromkeys(int(s) for s in sid_list))
         else:
+            sid_list = None
             _check_stream_id(req.stream_id)
         stack = self.stacks.get(kind)
         if stack is None:
             cap = 64
-            if req.per_stream_of_source and req.n_streams:
-                cap = max(64, 1 << int(np.ceil(np.log2(req.n_streams))))
+            if sid_list:
+                cap = max(64, _next_pow2(len(sid_list)))
             stack = self._new_stack(kind, cap)
             self.stacks[kind] = stack
 
-        def add_one(sid: Optional[int], syn_id: str):
+        def add_one(sid: Optional[int], syn_id: str, routed: list):
             # reuse: same id => same synopsis shared across workflows
             if syn_id in self.entries:
                 return
@@ -242,18 +293,24 @@ class SDE:
             if sid is None:
                 stack.mark_source(row)
             else:
-                stack.route = stack.route.at[sid].set(row)
+                routed.append((int(sid), row))
             self.entries[syn_id] = _Entry(
                 synopsis_id=syn_id, kind_key=kind, row=row, stream_id=sid,
                 federated=req.federated,
                 responsible_site=req.responsible_site,
                 continuous=req.continuous, source_id=req.source_id)
 
-        if req.per_stream_of_source:
-            for sid in range(req.n_streams):
-                add_one(sid, f"{req.synopsis_id}/{sid}")
+        routed: List[tuple] = []
+        if sid_list is not None:
+            for sid in sid_list:
+                add_one(int(sid), f"{req.synopsis_id}/{sid}", routed)
         else:
-            add_one(req.stream_id, req.synopsis_id)
+            add_one(req.stream_id, req.synopsis_id, routed)
+        if routed:
+            # one vectorized table insert for the whole build
+            stack.table.insert_many(
+                np.asarray([s for s, _ in routed], np.int64),
+                np.asarray([r for _, r in routed], np.int32))
         self._cq_groups = None
         return api.Response(request_id=req.request_id,
                             synopsis_id=req.synopsis_id,
@@ -367,52 +424,66 @@ class SDE:
     # ------------------------------------------------------------------
     # blue path: data
     # ------------------------------------------------------------------
-    def ingest(self, stream_ids: np.ndarray, values: np.ndarray,
-               mask: Optional[np.ndarray] = None) -> None:
+    def ingest(self, stream_ids, values, mask=None) -> None:
         """One batch of (stream, value) tuples; updates EVERY maintained
         synopsis of every kind with EXACTLY ONE jitted, donated-buffer
-        dispatch per kind stack — routing lookup, routed rows and
-        data-source rows are fused into that single program."""
-        t = len(stream_ids)
-        if mask is None:
-            mask = np.ones(t, bool)
-        # drop tuples whose stream id the routing table cannot hold: the
-        # route gather would clamp them onto the last slot and credit
-        # them to whatever synopsis lives there (same corruption _build
-        # guards against)
+        dispatch per kind stack — hashed routing probe, routed rows and
+        data-source rows are fused into that single program.
+
+        ``stream_ids``/``values`` accept anything ``np.asarray`` takes
+        (the JSON/service path hands in plain Python lists). Stream ids
+        are arbitrary ints in ``[0, 2**63)``; only unrepresentable ids
+        (negative, or uint64 values >= 2**63) are masked out."""
         sid_arr = np.asarray(stream_ids)
-        mask = mask & (sid_arr >= 0) & (sid_arr < _MAX_STREAMS)
+        values = np.asarray(values)
+        t = len(sid_arr)
+        mask = (np.ones(t, bool) if mask is None
+                else np.asarray(mask, bool))
+        sid64 = sid_arr.astype(np.int64)
+        mask = mask & (sid64 >= 0)
         self.tuples_ingested += int(mask.sum())
-        sids = jnp.asarray(stream_ids.astype(np.int32))
-        items = jnp.asarray(stream_ids.astype(np.uint32))
+        self.batches_ingested += 1
+        lo, hi = routing.split64(sid64)
+        sid_lo = jnp.asarray(lo)
+        sid_hi = jnp.asarray(hi)
+        items = jnp.asarray(routing.fold64(sid64))
         vals = jnp.asarray(values.astype(np.float32))
         msk = jnp.asarray(mask)
         for kind, stack in self.stacks.items():
             if stack.is_timeseries:
-                self._ingest_timeseries(stack, sids, vals, msk)
+                self._ingest_timeseries(stack, sid_lo, sid_hi, vals, msk)
             else:
-                self._ingest_stack(stack, sids, items, vals, msk)
+                self._ingest_stack(stack, sid_lo, sid_hi, items, vals, msk)
         self._emit_continuous()
 
-    def _ingest_stack(self, stack: _KindStack, sids, items, vals, msk):
+    def _ingest_stack(self, stack: _KindStack, sid_lo, sid_hi, items,
+                      vals, msk):
+        klo, khi, trows = stack.device_table()
         stack.state = _update(
-            stack.kind, self.backend, stack.sharding, stack.state,
-            stack.route, sids, items, vals, msk, stack.source_rows_idx())
+            stack.kind, self.backend, stack.sharding, stack.n_probe,
+            stack.state, klo, khi, trows, sid_lo, sid_hi, items, vals,
+            msk, stack.source_rows_idx())
 
-    def _ingest_timeseries(self, stack: _KindStack, sids, vals, msk):
+    def _ingest_timeseries(self, stack: _KindStack, sid_lo, sid_hi,
+                           vals, msk):
         """Time-series kinds (DFT): one tick per stream per batch — the
         batch is a StatStream 'basic window'; the last value per stream
-        wins (documented resolution reduction). Route scatter + step are
+        wins (documented resolution reduction). Route probe + step are
         one fused dispatch."""
-        stack.state = _step_all(stack.kind, stack.sharding, stack.state,
-                                stack.route, sids, vals, msk)
+        klo, khi, trows = stack.device_table()
+        stack.state = _step_all(stack.kind, stack.sharding, stack.n_probe,
+                                stack.state, klo, khi, trows, sid_lo,
+                                sid_hi, vals, msk)
 
     def _emit_continuous(self):
         """Evaluate ALL continuous queries of a kind per ingest batch in a
         single stacked-estimate program — no per-entry row gather. The
         padded rows array, planned (default) args and output sharding are
         byte-identical between lifecycle changes, so they are cached with
-        the grouping: per-ingest host work is O(1) plus the dispatch."""
+        the grouping: per-ingest host work is O(1) plus the dispatch.
+        Response ids key on the monotonic batch counter — a batch whose
+        tuples are all masked out must still emit FRESH request ids, not
+        collide with the previous batch's."""
         if self._cq_groups is None:
             self._cq_groups = self._plan_continuous()
         for kind, (ids, rows_dev, args, take, out_sh) in \
@@ -422,7 +493,7 @@ class SDE:
             out = jax.tree.map(np.asarray, out)
             for i, sid in enumerate(ids):
                 self.continuous_out.append(api.Response(
-                    request_id=f"cq/{sid}/{self.tuples_ingested}",
+                    request_id=f"cq/{sid}/{self.batches_ingested}",
                     synopsis_id=sid, value=take(out, i)))
 
     def _plan_continuous(self) -> Dict[Any, Any]:
@@ -467,21 +538,34 @@ class SDE:
     # fault tolerance + elasticity
     # ------------------------------------------------------------------
     def snapshot(self, directory: str, step: int = 0) -> None:
-        """Atomic engine checkpoint (state + routing + registry)."""
+        """Atomic engine checkpoint (state + routing + registry). The
+        routing table ships as its uint32 (keys_lo, keys_hi) halves plus
+        the int32 rows array — byte-identical probe layout on restore,
+        independent of the target device count (the mirror is
+        replicated)."""
         from repro.core.synopsis import name_of_kind
         from repro.training import checkpoint as ckpt
         kinds = list(self.stacks)
-        arrays = {f"stack{i}": dict(state=self.stacks[k].state,
-                                    route=self.stacks[k].route)
-                  for i, k in enumerate(kinds)}
+        arrays = {}
+        for i, k in enumerate(kinds):
+            stack = self.stacks[k]
+            lo, hi = routing.split64(stack.table.keys)
+            arrays[f"stack{i}"] = dict(
+                state=stack.state,
+                route=dict(keys_lo=lo, keys_hi=hi,
+                           rows=stack.table.rows))
         manifest = dict(
             site=self.site, backend=self.backend,
             tuples_ingested=self.tuples_ingested,
+            batches_ingested=self.batches_ingested,
             stacks=[dict(kind=name_of_kind(k),
                          params=_json_params(kind_params(k)),
                          capacity=self.stacks[k].capacity,
                          used=self.stacks[k].used,
-                         source_rows=self.stacks[k].source_rows)
+                         source_rows=self.stacks[k].source_rows,
+                         table=dict(size=self.stacks[k].table.size,
+                                    count=self.stacks[k].table.count,
+                                    max_probe=self.stacks[k].table.max_probe))
                     for k in kinds],
             entries={sid: dict(kind_index=kinds.index(e.kind_key),
                                row=e.row, stream_id=e.stream_id,
@@ -512,6 +596,8 @@ class SDE:
         eng = cls(site=man["site"], backend=man["backend"], mesh=mesh,
                   rules=rules)
         eng.tuples_ingested = man["tuples_ingested"]
+        eng.batches_ingested = man.get("batches_ingested",
+                                       man["tuples_ingested"])
         kinds = []
         like = {}
         for i, sk in enumerate(man["stacks"]):
@@ -521,12 +607,39 @@ class SDE:
             stack.source_rows = list(sk["source_rows"])
             eng.stacks[kind] = stack
             kinds.append(kind)
-            like[f"stack{i}"] = dict(state=stack.state, route=stack.route)
+            if "table" in sk:
+                size = sk["table"]["size"]
+                route_like = dict(keys_lo=np.zeros(size, np.uint32),
+                                  keys_hi=np.zeros(size, np.uint32),
+                                  rows=np.zeros(size, np.int32))
+            else:
+                # pre-hashed-routing snapshot: one dense int32 route array
+                route_like = np.zeros(_LEGACY_ROUTE_SLOTS, np.int32)
+            like[f"stack{i}"] = dict(state=stack.state, route=route_like)
         arrays, _ = ckpt.restore(like, directory, step_)
         for i, kind in enumerate(kinds):
-            eng.stacks[kind].state = arrays[f"stack{i}"]["state"]
-            eng.stacks[kind].route = arrays[f"stack{i}"]["route"]
-            eng.stacks[kind]._place()
+            stack = eng.stacks[kind]
+            stack.state = arrays[f"stack{i}"]["state"]
+            r = arrays[f"stack{i}"]["route"]
+            sk = man["stacks"][i]
+            if isinstance(r, dict):
+                lo = np.asarray(r["keys_lo"], np.uint32)
+                hi = np.asarray(r["keys_hi"], np.uint32)
+                table = routing.RouteTable(sk["table"]["size"])
+                table.keys = (lo.astype(np.int64)
+                              | (hi.astype(np.int64) << np.int64(32)))
+                table.rows = np.asarray(r["rows"], np.int32)
+                table.count = sk["table"]["count"]
+                table.max_probe = sk["table"]["max_probe"]
+                table.version += 1
+            else:
+                # migrate the legacy dense route into a hash table
+                dense = np.asarray(r, np.int32)
+                occ = np.nonzero(dense >= 0)[0]
+                table = routing.RouteTable()
+                table.insert_many(occ.astype(np.int64), dense[occ])
+            stack.table = table
+            stack._place()
         for sid, e in man["entries"].items():
             eng.entries[sid] = _Entry(
                 synopsis_id=sid, kind_key=kinds[e["kind_index"]],
@@ -560,6 +673,7 @@ class SDE:
             stack.state = federated.merge_rows(
                 kind, stack.state, jnp.asarray(rows_a, jnp.int32),
                 other.stacks[kind].state, jnp.asarray(rows_b, jnp.int32))
+        routed_by_kind: Dict[Any, List[tuple]] = {}
         for sid, oe in transfers:
             kind = oe.kind_key
             if kind not in self.stacks:
@@ -571,9 +685,16 @@ class SDE:
             if oe.stream_id is None:
                 stack.mark_source(row)
             else:
-                stack.route = stack.route.at[oe.stream_id].set(row)
+                routed_by_kind.setdefault(kind, []).append(
+                    (int(oe.stream_id), row))
             self.entries[sid] = dataclasses.replace(oe, row=row)
+        for kind, pairs in routed_by_kind.items():
+            # one vectorized table insert per kind, not one per synopsis
+            self.stacks[kind].table.insert_many(
+                np.asarray([s for s, _ in pairs], np.int64),
+                np.asarray([r for _, r in pairs], np.int32))
         self.tuples_ingested += other.tuples_ingested
+        self.batches_ingested += other.batches_ingested
         self._cq_groups = None
 
 
@@ -584,35 +705,39 @@ def _json_params(params):
 
 # ---------------------------------------------------------------------------
 # jitted update/estimate dispatch (cached per (kind, backend, sharding,
-# has_sources, shapes)). The cached program is the WHOLE blue path for one
-# kind: route lookup, routed update and data-source update fused into one
-# dispatch; the state buffer is donated (in-place on device), and — on a
-# mesh — pinned to the stack's `synopsis`-axis sharding.
+# has_sources, n_probe, shapes)). The cached program is the WHOLE blue path
+# for one kind: hashed routing probe, routed update and data-source update
+# fused into one dispatch; the state buffer is donated (in-place on device),
+# and — on a mesh — pinned to the stack's `synopsis`-axis sharding while the
+# routing-table mirror stays replicated.
 # ---------------------------------------------------------------------------
 import functools
 
 
 @functools.lru_cache(maxsize=None)
-def _update_fn(kind, backend: str, sharding, has_sources: bool):
-    def fused(state, route, sids, items, vals, msk, *src):
+def _update_fn(kind, backend: str, sharding, has_sources: bool,
+               n_probe: int):
+    def fused(state, klo, khi, trows, sid_lo, sid_hi, items, vals, msk,
+              *src):
         src_rows = src[0] if has_sources else None
-        syn_idx = route[sids]                      # [-1 => unrouted]
+        syn_idx = kops.route_probe(klo, khi, trows, sid_lo, sid_hi,
+                                   n_probe=n_probe)   # [-1 => unrouted]
         routed = msk & (syn_idx >= 0)
         rows = jnp.maximum(syn_idx, 0)
         if backend == "pallas":
-            from repro.kernels import ops as kops
+            from repro.kernels import ops as kops_
             if isinstance(kind, core.CountMin):
-                return kops.countmin_update(
+                return kops_.countmin_update(
                     state, rows, items, vals, routed, seeds=kind._seeds(),
                     log2_width=kind.log2_width, weighted=kind.weighted,
                     source_rows=src_rows, source_tuple_mask=msk)
             if isinstance(kind, core.AMS):
-                return kops.ams_update(
+                return kops_.ams_update(
                     state, rows, items, vals, routed, seeds=kind._seeds(),
                     log2_width=kind.log2_width,
                     source_rows=src_rows, source_tuple_mask=msk)
             if isinstance(kind, core.HyperLogLog):
-                return kops.hll_update(
+                return kops_.hll_update(
                     state, rows, items, routed, seed=kind.seed, p=kind.p,
                     source_rows=src_rows, source_tuple_mask=msk)
             # no kernel for this kind: fall through to XLA path
@@ -625,25 +750,32 @@ def _update_fn(kind, backend: str, sharding, has_sources: bool):
     return jax.jit(fused, **kw)
 
 
-def _update(kind, backend, sharding, state, route, sids, items, vals, msk,
-            src_rows=None):
-    fn = _update_fn(kind, backend, sharding, src_rows is not None)
+def _update(kind, backend, sharding, n_probe, state, klo, khi, trows,
+            sid_lo, sid_hi, items, vals, msk, src_rows=None):
+    fn = _update_fn(kind, backend, sharding, src_rows is not None, n_probe)
     if src_rows is None:
-        return fn(state, route, sids, items, vals, msk)
-    return fn(state, route, sids, items, vals, msk, src_rows)
+        return fn(state, klo, khi, trows, sid_lo, sid_hi, items, vals, msk)
+    return fn(state, klo, khi, trows, sid_lo, sid_hi, items, vals, msk,
+              src_rows)
 
 
 @functools.lru_cache(maxsize=None)
-def _step_fn(kind, sharding):
-    def fused(state, route, sids, vals, msk):
+def _step_fn(kind, sharding, n_probe: int):
+    def fused(state, klo, khi, trows, sid_lo, sid_hi, vals, msk):
         capacity = jax.tree.leaves(state)[0].shape[0]
-        syn_idx = route[sids]
+        syn_idx = kops.route_probe(klo, khi, trows, sid_lo, sid_hi,
+                                   n_probe=n_probe)
         routed = msk & (syn_idx >= 0)
         rows = jnp.where(routed, syn_idx, capacity)    # overflow slot
-        per_row = jnp.zeros((capacity + 1,), jnp.float32)
-        per_row = per_row.at[rows].set(vals)           # last write wins
-        hit = jnp.zeros((capacity + 1,), bool).at[rows].set(routed)
-        return batched.stacked_step(kind, state, per_row[:-1], hit[:-1])
+        # LAST routed tuple per row wins, deterministically: scatter-max
+        # the tuple order, then gather each winner's value (.at[].set with
+        # duplicate indices applies in implementation-defined order)
+        order = jnp.arange(sid_lo.shape[0], dtype=jnp.int32)
+        winner = jnp.full((capacity + 1,), -1, jnp.int32)
+        winner = winner.at[rows].max(jnp.where(routed, order, -1))[:-1]
+        hit = winner >= 0
+        per_row = jnp.where(hit, vals[jnp.maximum(winner, 0)], 0.0)
+        return batched.stacked_step(kind, state, per_row, hit)
 
     kw = dict(donate_argnums=0)
     if sharding is not None:
@@ -651,8 +783,10 @@ def _step_fn(kind, sharding):
     return jax.jit(fused, **kw)
 
 
-def _step_all(kind, sharding, state, route, sids, vals, msk):
-    return _step_fn(kind, sharding)(state, route, sids, vals, msk)
+def _step_all(kind, sharding, n_probe, state, klo, khi, trows, sid_lo,
+              sid_hi, vals, msk):
+    return _step_fn(kind, sharding, n_probe)(state, klo, khi, trows,
+                                             sid_lo, sid_hi, vals, msk)
 
 
 # ---------------------------------------------------------------------------
@@ -667,8 +801,7 @@ _ITEM_KINDS = (core.CountMin, core.BloomFilter, core.LossyCounting,
                core.StickySampling)
 
 
-def _next_pow2(n: int) -> int:
-    return 1 << max(0, (n - 1).bit_length())
+_next_pow2 = routing.next_pow2
 
 
 def _pad_rows(rows: Sequence[int]) -> np.ndarray:
@@ -681,13 +814,23 @@ def _pad_rows(rows: Sequence[int]) -> np.ndarray:
 
 
 def _check_stream_id(sid: Optional[int]) -> None:
-    """Reject stream ids the routing table cannot hold. None (data-source
-    synopses) is always valid."""
-    if sid is not None and not (0 <= int(sid) < _MAX_STREAMS):
+    """Reject stream ids the engine cannot represent. None (data-source
+    synopses) is always valid; anything in [0, 2**63) routes (hashed
+    routing — no table-size cap)."""
+    if sid is not None and not (0 <= int(sid) <= routing.MAX_STREAM_ID):
         raise ValueError(
-            f"stream id {sid} outside the routing table "
-            f"[0, {_MAX_STREAMS}); re-key the stream or raise "
-            "_MAX_STREAMS (hashed routing is the planned fix)")
+            f"stream id {sid} outside [0, 2**63); stream ids must be "
+            "non-negative 63-bit ints")
+
+
+def _coerce_items(raw, default) -> np.ndarray:
+    """Per-query ``items`` arg -> uint32 identities, folding 64-bit item
+    ids the same way ingest folds stream ids (``routing.fold64`` is the
+    identity below 2**32, so small-id queries are unchanged)."""
+    arr = np.asarray(raw if raw is not None else default, np.int64).ravel()
+    if arr.size and (arr.min() < 0):
+        raise ValueError(f"negative item id {int(arr.min())}")
+    return routing.fold64(arr)
 
 
 def _plan_queries(kind, queries: Sequence[Dict[str, Any]]):
@@ -710,7 +853,11 @@ def _plan_queries(kind, queries: Sequence[Dict[str, Any]]):
     lists = []
     for i, q in enumerate(queries):
         try:
-            lists.append(np.asarray(q.get(key, default), np_dtype).ravel())
+            if key == "items":
+                lists.append(_coerce_items(q.get(key), default))
+            else:
+                lists.append(
+                    np.asarray(q.get(key, default), np_dtype).ravel())
         except (TypeError, ValueError, OverflowError) as e:
             lists.append(np.asarray(default, np_dtype).ravel())
             errors[i] = f"bad {key!r} in query: {e!r}"

@@ -84,7 +84,9 @@ def spec_from_engine(sde, hll_id: str, cm_id: str,
     """Calibrate the cost model from a LIVE engine's synopses with one
     batched red-path call (the paper's 'SDE as a cost estimator'): the
     HLL supplies n_streams, the CM point-query batch supplies the update
-    volume. ``overrides`` pin any spec field the workflow fixes."""
+    volume. ``candidate_streams`` may be arbitrary 63-bit stream ids
+    (hashed routing — ids are folded consistently with ingest).
+    ``overrides`` pin any spec field the workflow fixes."""
     from .balancer import estimate_workload
     n_active, loads = estimate_workload(sde, hll_id, cm_id,
                                         candidate_streams)

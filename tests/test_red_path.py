@@ -373,36 +373,41 @@ def test_status_reports_actual_row_bytes():
 
 
 def test_register_stream_id_guard():
+    """Hashed routing: ids past the old 2**16 dense-table cap build and
+    route fine; only unrepresentable ids (negative / >= 2**63) are
+    rejected — and rejected BEFORE committing anything."""
     eng = SDE()
-    for bad in (1 << 16, (1 << 16) + 5, -1):
+    for bad in (-1, 1 << 63, (1 << 63) + 5):
         r = eng.handle({"type": "build", "request_id": "b",
                         "synopsis_id": f"x{bad}", "kind": "hyperloglog",
                         "params": {"rse": 0.05}, "stream_id": bad})
-        assert not r.ok and "routing table" in r.error, bad
-    # a per-stream build past the table must fail BEFORE committing any
-    # entry or stack (no partial build surviving an error response)
+        assert not r.ok and "2**63" in r.error, bad
+    # a per-stream build with one unrepresentable id fails atomically
     r = eng.handle({"type": "build", "request_id": "b", "synopsis_id":
                     "big", "kind": "hyperloglog", "params": {"rse": 0.05},
                     "per_stream_of_source": True,
-                    "n_streams": (1 << 16) + 1})
-    assert not r.ok and "routing table" in r.error
+                    "stream_ids": [7, -3]})
+    assert not r.ok and "2**63" in r.error
     assert not eng.entries and not eng.stacks   # nothing committed
-    # boundary id is accepted and routable
+    # ids far past the old 65536-slot table are accepted and routable
+    sid = (1 << 16) + 12345
     r = eng.handle({"type": "build", "request_id": "b", "synopsis_id":
                     "ok", "kind": "hyperloglog", "params": {"rse": 0.05},
-                    "stream_id": (1 << 16) - 1})
+                    "stream_id": sid})
     assert r.ok, r.error
-    eng.ingest(np.full(64, (1 << 16) - 1, np.int64),
-               np.ones(64, np.float32))
+    eng.ingest(np.full(64, sid, np.int64), np.ones(64, np.float32))
     q = eng.handle({"type": "adhoc", "request_id": "q", "synopsis_id":
                     "ok"})
     assert float(q.value) > 0
-    # tuples with out-of-range stream ids are DROPPED, not clamped onto
-    # the boundary synopsis (the ingest-side half of the guard)
+    # tuples of OTHER high ids update nothing here (no clamping onto
+    # this synopsis) but still count as ingested — they are valid data
     before = float(q.value)
     seen = eng.tuples_ingested
-    eng.ingest(np.full(8, 1 << 16, np.int64), np.ones(8, np.float32))
-    assert eng.tuples_ingested == seen
+    eng.ingest(np.full(8, sid + 1, np.int64), np.ones(8, np.float32))
+    assert eng.tuples_ingested == seen + 8
+    # negative ids are unrepresentable: dropped, not counted
+    eng.ingest(np.full(8, -5, np.int64), np.ones(8, np.float32))
+    assert eng.tuples_ingested == seen + 8
     q = eng.handle({"type": "adhoc", "request_id": "q2", "synopsis_id":
                     "ok"})
     assert float(q.value) == before
