@@ -48,6 +48,31 @@ def main():
           f"{sde.memory_bytes()/1e6:.1f} MB for "
           f"{len(sde.entries)} synopses")
 
+    # 2b. Pipelined ingest: `SDE(pipelined=True)` parks each batch's
+    #     continuous-query outputs on a bounded (depth-2) queue instead
+    #     of syncing device->host inside ingest, so host prep for the
+    #     next batch overlaps the device work of the previous one.
+    #     Syncs happen ONLY when (a) a newer batch pushes an old one off
+    #     the queue, (b) you call flush() — the explicit barrier — or
+    #     (c) the engine fences itself before a query/stop/build/
+    #     snapshot, which is why both modes return identical results.
+    psde = SDE(pipelined=True)
+    resp = psde.handle({"type": "build", "request_id": "p1",
+                        "synopsis_id": "live", "kind": "hyperloglog",
+                        "params": {"rse": 0.02}, "continuous": True})
+    assert resp.ok, resp.error
+    pstock = StockStream(n_streams=500, group_size=10, seed=1)
+    for _ in range(8):
+        sids, vals = pstock.level1_batch(2000)
+        batch = psde.ingest(sids, vals)       # returns without syncing
+    print(f"\npipelined ingest: batch {batch} acked, "
+          f"{psde.pending_batches} batches still in flight")
+    drained = psde.flush()                    # the explicit barrier
+    print(f"flush() drained {drained} batches -> "
+          f"{len(psde.continuous_out)} continuous responses "
+          f"(latest cardinality "
+          f"{float(psde.continuous_out[-1].value):,.0f})")
+
     # 3. Ad-hoc queries (red path).
     q = sde.handle({"type": "adhoc", "request_id": "q1",
                     "synopsis_id": "cardinality"})

@@ -109,6 +109,22 @@ def _source_fold(out: jax.Array, idx: jax.Array, contrib: jax.Array,
 TRACE_COUNT: collections.Counter = collections.Counter()
 DISPATCH_COUNT: collections.Counter = collections.Counter()
 
+# Blue-path pipeline probes: the engine's bounded ingest queue
+# (service/pipeline.py) reports how many dispatched-but-unmaterialized
+# batches are in flight, keyed by engine site. ``PIPELINE_IN_FLIGHT`` is
+# the current gauge, ``PIPELINE_MAX_IN_FLIGHT`` the high-water mark —
+# tests and benchmarks assert batches actually overlap (depth reached)
+# and that fences drain back to zero, without reaching into internals.
+PIPELINE_IN_FLIGHT: collections.Counter = collections.Counter()
+PIPELINE_MAX_IN_FLIGHT: collections.Counter = collections.Counter()
+
+
+def note_in_flight(tag: str, depth: int) -> None:
+    """Record a pipeline's current in-flight batch depth."""
+    PIPELINE_IN_FLIGHT[tag] = depth
+    if depth > PIPELINE_MAX_IN_FLIGHT[tag]:
+        PIPELINE_MAX_IN_FLIGHT[tag] = depth
+
 
 @functools.lru_cache(maxsize=None)
 def _estimate_all_fn(kind, out_sharding):

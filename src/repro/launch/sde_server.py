@@ -1,0 +1,77 @@
+"""JSON-lines SDEaaS front end — the launch-layer driver for the engine.
+
+One JSON request per input line (the paper's Kafka RequestTopic contract,
+Section 3), one JSON response per output line. Blue-path data rides the
+same channel as control/queries via ``{"type": "ingest", ...}`` — its
+ack carries the monotonic batch counter — and ``{"type": "flush"}`` is
+the explicit pipeline barrier. Continuous-query responses are
+interleaved into the output as their batches retire: immediately after
+each request on an eager engine, deferred until the bounded pipeline
+retires the batch (or a flush/fence drains it) on a pipelined one. EOF
+performs a final flush so no continuous response is ever lost.
+
+  PYTHONPATH=src python -m repro.launch.sde_server --pipelined \
+      < requests.jsonl > responses.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import IO, Iterable, Optional
+
+from repro.service import SDE
+
+
+def _drain_continuous(sde: SDE, out: IO[str]) -> int:
+    """Pop every retired continuous response onto the wire (in emission
+    order — the log is append-right, so we pop from the left)."""
+    n = 0
+    while sde.continuous_out:
+        out.write(sde.continuous_out.popleft().to_json() + "\n")
+        n += 1
+    return n
+
+
+def serve_lines(lines: Iterable[str], sde: Optional[SDE] = None, *,
+                out: IO[str] = sys.stdout) -> int:
+    """Drive ``sde`` (or a fresh eager/env-default engine) with
+    JSON-lines requests; write one response line per request plus the
+    continuous responses retired so far. Construct the SDE yourself to
+    pick the execution mode (``SDE(pipelined=True, ...)``). Returns the
+    number of requests handled."""
+    if sde is None:
+        sde = SDE()
+    n_requests = 0
+    for line in lines:
+        line = line.strip()
+        if not line:
+            continue
+        out.write(sde.handle(line).to_json() + "\n")
+        n_requests += 1
+        _drain_continuous(sde, out)
+    sde.flush()                      # final barrier: retire everything
+    _drain_continuous(sde, out)
+    return n_requests
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pipelined", action="store_true",
+                    help="bounded async ingest queue (deferred emission)")
+    ap.add_argument("--depth", type=int, default=2,
+                    help="pipeline depth (in-flight ingest batches)")
+    ap.add_argument("--input", default="-",
+                    help="requests file, '-' for stdin")
+    args = ap.parse_args(argv)
+    lines = sys.stdin if args.input == "-" else open(args.input)
+    sde = SDE(pipelined=args.pipelined, pipeline_depth=args.depth)
+    n = serve_lines(lines, sde)
+    print(f"[sde-server] handled {n} requests; "
+          f"{sde.tuples_ingested:,} tuples in {sde.batches_ingested} "
+          f"batches; continuous dropped={sde.continuous_out.dropped}",
+          file=sys.stderr)
+    return n
+
+
+if __name__ == "__main__":
+    main()

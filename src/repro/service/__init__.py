@@ -1,11 +1,15 @@
-# SDE-as-a-Service: the always-on engine, its JSON API and the
-# accuracy-budget workflow planner (paper Sections 3, 4, 7).
+# SDE-as-a-Service: the always-on engine, its JSON API, the pipelined
+# blue path and the accuracy-budget workflow planner (paper Sections 3,
+# 4, 7).
 from .api import (Request, Response, parse_request, BuildSynopsis,
                   StopSynopsis, LoadSynopsis, AdHocQuery, QueryMany,
-                  StatusReport)
+                  Ingest, Flush, StatusReport)
 from .engine import SDE, Federation
+from .pipeline import BoundedResponseLog, IngestPipeline, PendingBatch
 from .planner import Planner, WorkflowSpec
 
 __all__ = ["Request", "Response", "parse_request", "BuildSynopsis",
            "StopSynopsis", "LoadSynopsis", "AdHocQuery", "QueryMany",
-           "StatusReport", "SDE", "Federation", "Planner", "WorkflowSpec"]
+           "Ingest", "Flush", "StatusReport", "SDE", "Federation",
+           "BoundedResponseLog", "IngestPipeline", "PendingBatch",
+           "Planner", "WorkflowSpec"]

@@ -75,6 +75,30 @@ class QueryMany(Request):
 
 
 @dataclasses.dataclass
+class Ingest(Request):
+    """Blue-path data over JSON: one batch of (stream, value) tuples.
+
+    The ack's ``value`` carries the monotonic batch counter assigned to
+    this batch (``{"batch": n, ...}``) — the same counter that keys the
+    batch's continuous-query response ids (``cq/<synopsis>/<n>``) — plus
+    the pipeline's current in-flight depth, so a JSON-driven workflow
+    can correlate deferred continuous output with the ingest that
+    produced it under pipelined execution.
+    """
+    stream_ids: List[Any] = dataclasses.field(default_factory=list)
+    values: List[float] = dataclasses.field(default_factory=list)
+    mask: Optional[List[bool]] = None
+
+
+@dataclasses.dataclass
+class Flush(Request):
+    """Pipeline barrier: materialize every in-flight continuous batch
+    into the engine's continuous output before the ack returns. The
+    ack's ``value`` reports how many batches were drained. A no-op (0
+    drained) on an eager engine or an idle pipeline."""
+
+
+@dataclasses.dataclass
 class StatusReport(Request):
     pass
 
@@ -110,6 +134,8 @@ _KINDS = {
     "load": LoadSynopsis,
     "adhoc": AdHocQuery,
     "query_many": QueryMany,
+    "ingest": Ingest,
+    "flush": Flush,
     "status": StatusReport,
 }
 

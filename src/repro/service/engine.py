@@ -24,12 +24,27 @@ Structure mirrors the paper's architecture, adapted to JAX:
 Capacity management: kind stacks grow by doubling (amortized re-jit),
 "a request for a new synopsis assigns new tasks, not task slots"; the
 routing tables grow-and-rehash independently of stack capacity.
+
+Execution modes: the blue path runs **eager** (continuous-query outputs
+are materialized to host before ``ingest`` returns — the pre-PR-4
+behaviour) or **pipelined** (``SDE(pipelined=True)``, or env
+``SDE_PIPELINED=1``): ingest dispatches the fused update and
+stacked-estimate programs and returns immediately, parking the batch's
+continuous outputs as device futures on a bounded depth-2 queue
+(``service/pipeline.py``). Host prep for batch N+1 then overlaps batch
+N's device work. Futures materialize into ``continuous_out`` when the
+queue retires the batch (a newer submission exceeds the depth), on an
+explicit ``flush()``, or at a fence — ``query_many``/``handle`` reads,
+build/stop/grow, snapshot and elastic merge all drain the pipeline
+first, so both modes produce byte-identical synopsis state and
+identical continuous responses (ids and values) in the same order.
 """
 from __future__ import annotations
 
 import dataclasses
 import importlib
 import json
+import os
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax
@@ -42,7 +57,7 @@ from repro.core import batched, federated
 from repro.core.synopsis import Synopsis, kind_params
 from repro.kernels import ops as kops
 from repro.sharding import specs
-from . import api, routing
+from . import api, pipeline, routing
 
 # dense route size of pre-hashed-routing snapshots (the old _MAX_STREAMS);
 # restore migrates these into a RouteTable
@@ -213,14 +228,26 @@ class SDE:
 
     def __init__(self, site: str = "site-0", backend: str = "xla",
                  mesh: Optional[Mesh] = None,
-                 rules: Optional[specs.MeshRules] = None):
+                 rules: Optional[specs.MeshRules] = None,
+                 pipelined: Optional[bool] = None, pipeline_depth: int = 2,
+                 continuous_out_cap: Optional[int] = 65536):
         self.site = site
         self.backend = backend
         self.mesh = mesh
         self.rules = rules or specs.DEFAULT_RULES
         self.stacks: Dict[Any, _KindStack] = {}
         self.entries: Dict[str, _Entry] = {}
-        self.continuous_out: List[api.Response] = []
+        # bounded: a consumer that falls behind loses the OLDEST
+        # responses (counted in .dropped), never stalls ingest
+        self.continuous_out = pipeline.BoundedResponseLog(continuous_out_cap)
+        # pipelined=None defers to the SDE_PIPELINED env toggle, so whole
+        # suites (CI's pipelined smoke job) flip execution mode untouched
+        if pipelined is None:
+            pipelined = os.environ.get("SDE_PIPELINED", "") not in ("", "0")
+        self.pipelined = bool(pipelined)
+        self._pipeline = (pipeline.IngestPipeline(
+            self._retire_batch, depth=pipeline_depth, tag=site)
+            if self.pipelined else None)
         self.tuples_ingested = 0
         self.batches_ingested = 0   # monotonic; keys continuous responses
         # continuous queries grouped by kind: {kind: (ids, rows)} — rebuilt
@@ -247,6 +274,10 @@ class SDE:
                 return self._query(req)
             if isinstance(req, api.QueryMany):
                 return self._query_many_req(req)
+            if isinstance(req, api.Ingest):
+                return self._ingest_req(req)
+            if isinstance(req, api.Flush):
+                return self._flush_req(req)
             if isinstance(req, api.StatusReport):
                 return self._status(req)
             raise ValueError(f"unhandled request {req}")
@@ -260,6 +291,9 @@ class SDE:
             return api.Response(request_id=rid, ok=False, error=repr(e))
 
     def _build(self, req: api.BuildSynopsis) -> api.Response:
+        # fence: builds can grow stacks (capacity doubling) and mutate
+        # routing tables; pending continuous batches retire first
+        self.flush()
         kind = core.make_kind(req.kind, **req.params)
         # validate EVERY routed stream id before any allocation: a failed
         # build must not commit partial entries. Ids are arbitrary 63-bit
@@ -317,6 +351,10 @@ class SDE:
                             params=kind_params(kind))
 
     def _stop(self, req: api.StopSynopsis) -> api.Response:
+        # fence: stopping frees + re-initializes rows and compacts the
+        # routing table; the stopped synopses' final continuous responses
+        # (already dispatched) must land in continuous_out first
+        self.flush()
         ids = [k for k in self.entries
                if k == req.synopsis_id or k.startswith(req.synopsis_id + "/")]
         if not ids:
@@ -349,6 +387,10 @@ class SDE:
         queries are grouped by kind, their args batched into padded device
         arrays, and each group reads the `synopsis`-sharded stack state in
         place — no per-query host round trip."""
+        # fence: pending continuous batches were dispatched against
+        # earlier state; they retire before ad-hoc reads answer, so the
+        # response stream stays in ingest order
+        self.flush()
         responses: List[Optional[api.Response]] = [None] * len(requests)
         groups: Dict[Any, List[int]] = {}
         for i, req in enumerate(requests):
@@ -411,6 +453,25 @@ class SDE:
                                    if n_fail else ""),
                             value=[dataclasses.asdict(r) for r in rs])
 
+    def _ingest_req(self, req: api.Ingest) -> api.Response:
+        """JSON blue path: the ack carries the monotonic batch counter
+        (keys this batch's ``cq/<id>/<batch>`` continuous responses) and
+        the pipeline depth at return time."""
+        batch = self.ingest(req.stream_ids, req.values, req.mask)
+        return api.Response(
+            request_id=req.request_id,
+            value=dict(batch=batch, tuples_ingested=self.tuples_ingested,
+                       in_flight=self.pending_batches))
+
+    def _flush_req(self, req: api.Flush) -> api.Response:
+        drained = self.flush()
+        return api.Response(
+            request_id=req.request_id,
+            value=dict(drained=drained,
+                       batches_ingested=self.batches_ingested,
+                       continuous_unread=len(self.continuous_out),
+                       continuous_dropped=self.continuous_out.dropped))
+
     def _status(self, req: api.StatusReport) -> api.Response:
         per_row = {k: s.row_bytes() for k, s in self.stacks.items()}
         info = {
@@ -424,7 +485,7 @@ class SDE:
     # ------------------------------------------------------------------
     # blue path: data
     # ------------------------------------------------------------------
-    def ingest(self, stream_ids, values, mask=None) -> None:
+    def ingest(self, stream_ids, values, mask=None) -> int:
         """One batch of (stream, value) tuples; updates EVERY maintained
         synopsis of every kind with EXACTLY ONE jitted, donated-buffer
         dispatch per kind stack — hashed routing probe, routed rows and
@@ -433,28 +494,69 @@ class SDE:
         ``stream_ids``/``values`` accept anything ``np.asarray`` takes
         (the JSON/service path hands in plain Python lists). Stream ids
         are arbitrary ints in ``[0, 2**63)``; only unrepresentable ids
-        (negative, or uint64 values >= 2**63) are masked out."""
+        (negative, or uint64 values >= 2**63) are masked out.
+
+        Returns the batch's monotonic id — the counter that keys this
+        batch's continuous responses (``cq/<synopsis>/<id>``). Eager
+        engines materialize those responses before returning; pipelined
+        engines park them on the bounded queue and return immediately
+        (see ``flush``)."""
         sid_arr = np.asarray(stream_ids)
-        values = np.asarray(values)
+        # np.asarray(values, float32) is a NO-OP when the caller already
+        # hands in float32 (the hot path) — .astype would always copy
+        vals_np = np.asarray(values, np.float32)
+        if len(vals_np) != len(sid_arr):
+            raise ValueError(
+                f"ingest batch mismatch: {len(sid_arr)} stream_ids vs "
+                f"{len(vals_np)} values — the two must align 1:1")
         t = len(sid_arr)
-        mask = (np.ones(t, bool) if mask is None
-                else np.asarray(mask, bool))
+        if mask is None:
+            mask = np.ones(t, bool)
+        else:
+            mask = np.asarray(mask, bool)
+            if len(mask) != t:
+                raise ValueError(
+                    f"ingest batch mismatch: {t} stream_ids vs "
+                    f"{len(mask)} mask entries — the two must align 1:1")
         sid64 = sid_arr.astype(np.int64)
         mask = mask & (sid64 >= 0)
         self.tuples_ingested += int(mask.sum())
         self.batches_ingested += 1
+        batch_id = self.batches_ingested
         lo, hi = routing.split64(sid64)
         sid_lo = jnp.asarray(lo)
         sid_hi = jnp.asarray(hi)
         items = jnp.asarray(routing.fold64(sid64))
-        vals = jnp.asarray(values.astype(np.float32))
+        vals = jnp.asarray(vals_np)
         msk = jnp.asarray(mask)
         for kind, stack in self.stacks.items():
             if stack.is_timeseries:
                 self._ingest_timeseries(stack, sid_lo, sid_hi, vals, msk)
             else:
                 self._ingest_stack(stack, sid_lo, sid_hi, items, vals, msk)
-        self._emit_continuous()
+        pending = self._dispatch_continuous(batch_id)
+        if pending is not None:
+            if self._pipeline is not None:
+                self._pipeline.submit(pending)
+            else:
+                self._retire_batch(pending)
+        return batch_id
+
+    def flush(self) -> int:
+        """Pipeline barrier: materialize every pending continuous batch
+        into ``continuous_out`` (oldest first — the order eager emission
+        would have produced). Returns the number of batches drained; 0
+        on an eager engine or an idle pipeline. This is the ONLY point a
+        pipelined blue path syncs device→host; the engine calls it as a
+        fence before query reads, build/stop/grow, snapshot and merge."""
+        if self._pipeline is None:
+            return 0
+        return self._pipeline.flush()
+
+    @property
+    def pending_batches(self) -> int:
+        """Ingest batches whose continuous output is still in flight."""
+        return self._pipeline.in_flight if self._pipeline else 0
 
     def _ingest_stack(self, stack: _KindStack, sid_lo, sid_hi, items,
                       vals, msk):
@@ -475,7 +577,8 @@ class SDE:
                                 stack.state, klo, khi, trows, sid_lo,
                                 sid_hi, vals, msk)
 
-    def _emit_continuous(self):
+    def _dispatch_continuous(self, batch_id: int
+                             ) -> Optional[pipeline.PendingBatch]:
         """Evaluate ALL continuous queries of a kind per ingest batch in a
         single stacked-estimate program — no per-entry row gather. The
         padded rows array, planned (default) args and output sharding are
@@ -483,17 +586,32 @@ class SDE:
         the grouping: per-ingest host work is O(1) plus the dispatch.
         Response ids key on the monotonic batch counter — a batch whose
         tuples are all masked out must still emit FRESH request ids, not
-        collide with the previous batch's."""
+        collide with the previous batch's.
+
+        Returns the batch's un-materialized emissions (device futures) —
+        NO host sync happens here; ``_retire_batch`` materializes them
+        either immediately (eager) or when the pipeline retires the
+        batch. None when no continuous queries are registered."""
         if self._cq_groups is None:
             self._cq_groups = self._plan_continuous()
+        if not self._cq_groups:
+            return None
+        emissions = []
         for kind, (ids, rows_dev, args, take, out_sh) in \
                 self._cq_groups.items():
             out = kops.estimate_all(kind, self.stacks[kind].state,
                                     rows_dev, *args, out_sharding=out_sh)
+            emissions.append((ids, take, out))
+        return pipeline.PendingBatch(batch_id, emissions)
+
+    def _retire_batch(self, pending: pipeline.PendingBatch) -> None:
+        """Materialize one batch's continuous outputs (the only
+        device→host sync of the blue path) into ``continuous_out``."""
+        for ids, take, out in pending.emissions:
             out = jax.tree.map(np.asarray, out)
             for i, sid in enumerate(ids):
                 self.continuous_out.append(api.Response(
-                    request_id=f"cq/{sid}/{self.batches_ingested}",
+                    request_id=f"cq/{sid}/{pending.batch_id}",
                     synopsis_id=sid, value=take(out, i)))
 
     def _plan_continuous(self) -> Dict[Any, Any]:
@@ -526,6 +644,7 @@ class SDE:
         return [take(out, i) for i in range(n)], errors[:n]
 
     def state_of(self, synopsis_id: str):
+        self.flush()   # fence: a state read observes all ingested batches
         e = self.entries[synopsis_id]
         return batched.stacked_row(self.stacks[e.kind_key].state, e.row)
 
@@ -545,6 +664,10 @@ class SDE:
         replicated)."""
         from repro.core.synopsis import name_of_kind
         from repro.training import checkpoint as ckpt
+        # fence: every pending continuous batch retires before the
+        # checkpoint — a restore must not resurrect an engine that still
+        # owes responses it can no longer produce
+        self.flush()
         kinds = list(self.stacks)
         arrays = {}
         for i, k in enumerate(kinds):
@@ -653,6 +776,11 @@ class SDE:
         """Elastic scale-down: absorb another engine's synopses.
         Matching synopsis ids merge (mergeability) — vectorized into ONE
         row-wise merge dispatch per kind; new ids transfer row by row."""
+        # fence BOTH engines: this engine's stacks are about to mutate,
+        # and the absorbed engine's pending responses must surface on its
+        # own log before its state is read (state_of fences `other` too)
+        self.flush()
+        other.flush()
         matches: Dict[Any, tuple[list[int], list[int]]] = {}
         transfers = []
         for sid, oe in other.entries.items():
