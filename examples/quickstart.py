@@ -97,8 +97,17 @@ def main():
     print(f"\n100 bid volumes in one dispatch: "
           f"min={min(vols):,.0f} max={max(vols):,.0f}")
 
-    # 4. Federated merge across two 'sites' (yellow path).
-    fed = Federation(["eu", "us"])
+    # 4. Federated queries across two 'sites' (yellow path). With one
+    #    device per site available, pass a mesh whose `site` axis plays
+    #    the DCN between clusters: each site's state lives on its own
+    #    device, site ingest runs site-locally, and a federated query is
+    #    ONE compiled collective program — `federated.merge_over_axis`
+    #    psum/pmax-merges the partial synopses ACROSS the axis and the
+    #    estimate executes at the responsible site. Without enough
+    #    devices the same API answers via the host-merge path; results
+    #    are byte-identical either way.
+    from repro.launch.mesh import try_federation_mesh
+    fed = Federation(["eu", "us"], mesh=try_federation_mesh(2))
     fed.broadcast({"type": "build", "request_id": "f", "synopsis_id": "h",
                    "kind": "hyperloglog", "params": {"rse": 0.02},
                    "federated": True, "responsible_site": "eu"})
@@ -106,9 +115,16 @@ def main():
                           np.ones(3000, np.float32))
     fed.sdes["us"].ingest(np.arange(2000, 5000, dtype=np.uint32),
                           np.ones(3000, np.float32))
-    est = float(fed.query_federated("h", {}, "eu"))
-    print(f"\nfederated distinct count: {est:,.0f} (true 5,000) — "
-          f"shipped only {fed.query_bytes('h'):,} bytes")
+    #    The JSON `federated_query` request reports the fig 5d metrics:
+    #    what the collective shipped across the site axis vs what
+    #    gathering every site's state to the responsible host would ship.
+    resp = fed.handle({"type": "federated_query", "request_id": "fq",
+                       "synopsis_id": "h", "responsible_site": "eu"})
+    print(f"\nfederated distinct count: {float(resp.value):,.0f} "
+          f"(true 5,000) via the {resp.params['path']} path — shipped "
+          f"{resp.params['collective_operand_bytes']:,} bytes "
+          f"(host-merge would ship "
+          f"{resp.params['host_merge_bytes']:,})")
 
     # 5. Status report.
     st = sde.handle({"type": "status", "request_id": "s"})

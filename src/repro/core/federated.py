@@ -27,10 +27,24 @@ from jax import lax
 from .synopsis import Synopsis
 
 
+def fresh_count(kind: Synopsis, state: Any) -> jax.Array:
+    """Freshness key of a ``merge_mode == "fresh"`` replica: the number of
+    ticks it has absorbed. Kinds may override via a ``fresh_count(state)``
+    method; the default reads ``state["count"]`` (DFT)."""
+    if hasattr(kind, "fresh_count"):
+        return kind.fresh_count(state)
+    return state["count"]
+
+
 def merge_over_axis(kind: Synopsis, state: Any, axis_name: str) -> Any:
     """Global merge of per-shard synopsis states along a mesh axis.
 
-    Must be called inside shard_map/pmap context where `axis_name` exists.
+    Must be called inside shard_map/pmap/vmap context where `axis_name`
+    exists. Every shard returns the SAME merged state (psum/pmax results
+    are replicated by construction; the gather and fresh branches compute
+    an identical reduction on every shard), and the result is
+    byte-identical to the host-side ``merge_reduce`` fold over the same
+    shards in axis order.
     """
     mode = getattr(kind, "merge_mode", "gather")
     if mode == "sum":
@@ -38,25 +52,55 @@ def merge_over_axis(kind: Synopsis, state: Any, axis_name: str) -> Any:
     if mode == "max":
         return jax.tree.map(lambda x: lax.pmax(x, axis_name), state)
     if mode == "fresh":
-        # keep the replica with the max count: gather then reduce via merge
-        pass
-    # generic: all-gather shards then fold with the kind's merge
+        # keep-max-count replica selection: replicas are exchanged, not
+        # reduced. Only the SCALAR tick counts are all-gathered; the
+        # winning replica is then broadcast with one state-sized masked
+        # psum. Ties keep the lowest site index — the explicit selection
+        # rule ``merge_reduce`` applies to fresh stacks (the
+        # keep-strictly-fresher pairwise ``merge`` is not associative on
+        # ties, so N-way fresh folds select, they don't fold).
+        counts = lax.all_gather(fresh_count(kind, state), axis_name)
+        winner = jnp.argmax(counts)          # first max on ties
+        mine = lax.axis_index(axis_name) == winner
+
+        def broadcast_winner(x):
+            # float leaves are summed as their integer BIT PATTERNS
+            # (losers contribute 0), because a float psum is not
+            # byte-preserving for the winner: XLA seeds add-reductions
+            # with +0.0, which flips the sign of any -0.0 slot in the
+            # winning replica and breaks byte-identity with the host
+            # fold. Integer adds against zero are exact bit-wise.
+            if jnp.issubdtype(x.dtype, jnp.floating):
+                bits_dtype = jnp.uint16 if x.dtype.itemsize == 2 \
+                    else jnp.uint32
+                bits = lax.bitcast_convert_type(x, bits_dtype)
+                picked = lax.psum(
+                    jnp.where(mine, bits, jnp.zeros_like(bits)), axis_name)
+                return lax.bitcast_convert_type(picked, x.dtype)
+            return lax.psum(jnp.where(mine, x, jnp.zeros_like(x)),
+                            axis_name)
+
+        return jax.tree.map(broadcast_winner, state)
+    # generic: all-gather shards then fold with the kind's merge. The
+    # fold is merge_reduce — the SAME pairwise tree the host-side
+    # responsible-site path runs — so collective and host merges are
+    # byte-identical even for order-sensitive merges (samples, quantile
+    # summaries). The [N] leading axis of the gathered stack is static,
+    # so the whole fold inlines into the calling program.
     gathered = jax.tree.map(
         functools.partial(lax.all_gather, axis_name=axis_name), state)
-    n = lax.psum(1, axis_name)
+    return merge_reduce(kind, gathered)
 
-    def fold(acc, i):
-        shard = jax.tree.map(lambda x: x[i], gathered)
-        return kind.merge(acc, shard), None
 
-    first = jax.tree.map(lambda x: x[0], gathered)
-    if isinstance(n, int):  # static axis size
-        acc = first
-        for i in range(1, n):
-            acc = kind.merge(acc, jax.tree.map(lambda x: x[i], gathered))
-        return acc
-    acc, _ = jax.lax.scan(fold, first, jnp.arange(1, n))
-    return acc
+def estimate_over_axis(kind: Synopsis, state: Any, axis_name: str,
+                       *args: Any) -> Any:
+    """Federated estimate as a real collective: merge the per-site partial
+    states over ``axis_name`` (psum/pmax/all_gather — see
+    ``merge_over_axis``) and run the kind's estimate on the merged state,
+    all inside the calling shard_map/pmap program. Every shard of the
+    axis computes the identical answer, so the responsible site reads its
+    local copy without another hop."""
+    return kind.estimate(merge_over_axis(kind, state, axis_name), *args)
 
 
 def merge_rows(kind: Synopsis, stacked_a: Any, rows_a: jax.Array,
@@ -86,7 +130,17 @@ def merge_reduce(kind: Synopsis, stacked: Any) -> Any:
     stack of partial states to one merged state with vmapped pairwise
     merges — ceil(log2 S) merge steps instead of S - 1 sequential ones,
     all inside the calling program (jit-friendly: S is a static shape).
-    Mergeability makes any reduction order valid."""
+    Mergeability makes any reduction order valid.
+
+    ``merge_mode == "fresh"`` stacks are SELECTED, not folded: keep the
+    replica with the max count, ties to the lowest row. The pairwise
+    keep-strictly-fresher ``merge`` is not associative on ties (the
+    bracket position, not the row order, would pick the winner), so an
+    explicit argmax keeps this path, the sequential fold and
+    ``merge_over_axis`` byte-identical."""
+    if getattr(kind, "merge_mode", "gather") == "fresh":
+        winner = jnp.argmax(fresh_count(kind, stacked))
+        return jax.tree.map(lambda x: x[winner], stacked)
     n = jax.tree.leaves(stacked)[0].shape[0]
     while n > 1:
         half = n // 2
@@ -106,3 +160,26 @@ def communication_bytes(kind: Synopsis, state: Any) -> int:
     """Bytes a site ships to the responsible site for one federated
     estimate = the synopsis state size (paper: 'only small bitmaps')."""
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(state))
+
+
+def collective_operand_bytes(kind: Synopsis, state: Any,
+                             n_sites: int) -> int:
+    """Bytes that cross the site axis for ONE federated estimate on the
+    collective path (fig 5d). ``sum``/``max`` merges combine in-network
+    (the psum/pmax reduction tree adds partials hop by hop), so the
+    responsible site receives one state-sized operand regardless of the
+    number of sites. ``fresh`` ships the scalar tick counts plus one
+    state-sized masked psum. ``gather`` has no in-network combine: every
+    site's state lands at the merge point — the same bytes the host-merge
+    path ships. Never exceeds ``n_sites *`` the per-site
+    ``communication_bytes`` of the host-merge path."""
+    b = communication_bytes(kind, state)
+    mode = getattr(kind, "merge_mode", "gather")
+    if mode in ("sum", "max"):
+        return b
+    if mode == "fresh":
+        # the count gather rides along; clamped so degenerate cases
+        # (one site, tiny states) never exceed the host-merge bound
+        count = fresh_count(kind, state)
+        return min(b + n_sites * count.dtype.itemsize, n_sites * b)
+    return n_sites * b

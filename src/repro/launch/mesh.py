@@ -19,6 +19,36 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_federation_mesh(n_sites: int | None = None, *, devices=None):
+    """1-D mesh whose single ``site`` axis carries the federation's
+    synopsis merges: one lead device per geo-dispersed site, the axis
+    playing the role of the DCN links between clusters. Pass the result
+    to ``Federation(mesh=...)`` — each site's SDE state is pinned to its
+    slice and ``federated.merge_over_axis`` runs over the axis. On a
+    production multi-pod mesh, hand ``make_production_mesh(multi_pod=
+    True)`` to ``Federation`` instead: the ``pod`` axis plays the site
+    role and the federation takes one lead device per pod."""
+    import numpy as np
+    devs = list(devices) if devices is not None else jax.devices()
+    n = n_sites if n_sites is not None else len(devs)
+    if not 1 <= n <= len(devs):
+        raise ValueError(
+            f"federation mesh needs one device per site: asked for {n} "
+            f"sites, have {len(devs)} devices")
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devs[:n]), ("site",))
+
+
+def try_federation_mesh(n_sites: int, *, devices=None):
+    """``make_federation_mesh`` when the host has a device per site, else
+    None — the one-liner demos/benchmarks use to fall back to the
+    host-merge federation on single-device machines."""
+    devs = list(devices) if devices is not None else jax.devices()
+    if len(devs) < n_sites:
+        return None
+    return make_federation_mesh(n_sites, devices=devs)
+
+
 def make_debug_mesh(n_devices: int | None = None):
     """Small mesh over whatever devices exist (tests)."""
     n = n_devices or len(jax.devices())

@@ -2,14 +2,14 @@
 # blue path and the accuracy-budget workflow planner (paper Sections 3,
 # 4, 7).
 from .api import (Request, Response, parse_request, BuildSynopsis,
-                  StopSynopsis, LoadSynopsis, AdHocQuery, QueryMany,
-                  Ingest, Flush, StatusReport)
+                  StopSynopsis, LoadSynopsis, AdHocQuery, FederatedQuery,
+                  QueryMany, Ingest, Flush, StatusReport)
 from .engine import SDE, Federation
 from .pipeline import BoundedResponseLog, IngestPipeline, PendingBatch
 from .planner import Planner, WorkflowSpec
 
 __all__ = ["Request", "Response", "parse_request", "BuildSynopsis",
-           "StopSynopsis", "LoadSynopsis", "AdHocQuery", "QueryMany",
-           "Ingest", "Flush", "StatusReport", "SDE", "Federation",
-           "BoundedResponseLog", "IngestPipeline", "PendingBatch",
-           "Planner", "WorkflowSpec"]
+           "StopSynopsis", "LoadSynopsis", "AdHocQuery", "FederatedQuery",
+           "QueryMany", "Ingest", "Flush", "StatusReport", "SDE",
+           "Federation", "BoundedResponseLog", "IngestPipeline",
+           "PendingBatch", "Planner", "WorkflowSpec"]

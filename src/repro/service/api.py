@@ -63,6 +63,25 @@ class AdHocQuery(Request):
 
 
 @dataclasses.dataclass
+class FederatedQuery(Request):
+    """Global estimate over every site of a federation (paper Case 2/3:
+    the responsible site synthesizes the answer from the sites' partial
+    synopses). Served by ``Federation.handle`` — on a mesh-backed
+    federation the site merge runs as ONE compiled collective over the
+    ``site``/``pod`` axis; otherwise the legacy host-side gather+merge
+    answers. The response's ``params`` carries the fig 5d communication
+    metrics: ``collective_operand_bytes`` (what the collective merge
+    ships across the site axis), ``host_merge_bytes`` (what gathering
+    every site's state to the responsible host ships — also exactly what
+    the executed path shipped when ``path == "host"``), ``path``
+    ("collective" | "host") and ``sites`` (how many sites contributed a
+    partial state)."""
+    synopsis_id: str = ""
+    query: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    responsible_site: str = ""
+
+
+@dataclasses.dataclass
 class QueryMany(Request):
     """Answer many ad-hoc queries in one request (SDEaaS batched red path).
 
@@ -133,6 +152,7 @@ _KINDS = {
     "stop": StopSynopsis,
     "load": LoadSynopsis,
     "adhoc": AdHocQuery,
+    "federated_query": FederatedQuery,
     "query_many": QueryMany,
     "ingest": Ingest,
     "flush": Flush,

@@ -17,9 +17,13 @@ Structure mirrors the paper's architecture, adapted to JAX:
     queries of a kind are re-evaluated per ingest batch in one program.
     Queries never enter (or back-pressure) the update path.
   * yellow path: federated synopses — ``Federation`` keeps one SDE per
-    site and synthesizes global estimates at the responsible site with
-    ``kernels.ops.estimate_merged`` (``core.federated.merge_reduce`` +
-    estimate fused into one program — collective mergeability).
+    site and synthesizes global estimates at the responsible site. On a
+    mesh with a ``site``/``pod`` axis each site's state is pinned to its
+    own device and the merge runs as a REAL collective inside one
+    shard_map-ped program (``kernels.ops.estimate_collective`` driving
+    ``core.federated.merge_over_axis``: psum/pmax/all_gather over the
+    axis); off-mesh, host copies are gathered and tree-merged
+    (``kernels.ops.estimate_merged`` — the equivalence oracle).
 
 Capacity management: kind stacks grow by doubling (amortized re-jit),
 "a request for a new synopsis assigns new tasks, not task slots"; the
@@ -87,10 +91,12 @@ class _KindStack:
 
     def __init__(self, kind: Synopsis, capacity: int = 64,
                  mesh: Optional[Mesh] = None,
-                 rules: Optional[specs.MeshRules] = None):
+                 rules: Optional[specs.MeshRules] = None,
+                 device=None):
         self.kind = kind
         self.capacity = capacity
         self.mesh = mesh
+        self.device = device            # pin to ONE device (federation site)
         self.rules = rules or specs.DEFAULT_RULES
         self.state = batched.stacked_init(kind, capacity)
         self.table = routing.RouteTable()  # stream id -> row (host side)
@@ -110,12 +116,15 @@ class _KindStack:
         return specs.stack_sharding(self.rules, self.mesh, self.capacity)
 
     def _place(self):
-        """Pin state rows over the synopsis axis (the routing table's
-        device mirror is placed lazily by ``device_table``)."""
-        sh = self.sharding
-        if sh is None:
+        """Pin state rows over the synopsis axis — or, for a federation
+        site, to the site's own device, so ingest's jitted programs run
+        where the site lives (the routing table's device mirror is placed
+        lazily by ``device_table``)."""
+        target = self.sharding if self.device is None else self.device
+        if target is None:
             return
-        self.state = jax.tree.map(lambda x: jax.device_put(x, sh), self.state)
+        self.state = jax.tree.map(
+            lambda x: jax.device_put(x, target), self.state)
 
     def device_table(self):
         """(keys_lo, keys_hi, rows) device mirror of the routing table —
@@ -126,7 +135,10 @@ class _KindStack:
                 or self._dev_table_version != self.table.version):
             lo, hi = routing.split64(self.table.keys)
             arrs = (lo, hi, self.table.rows)
-            if self.mesh is not None and not self.mesh.empty:
+            if self.device is not None:
+                self._dev_table = tuple(
+                    jax.device_put(a, self.device) for a in arrs)
+            elif self.mesh is not None and not self.mesh.empty:
                 rep = NamedSharding(self.mesh, P())
                 self._dev_table = tuple(
                     jax.device_put(a, rep) for a in arrs)
@@ -230,10 +242,16 @@ class SDE:
                  mesh: Optional[Mesh] = None,
                  rules: Optional[specs.MeshRules] = None,
                  pipelined: Optional[bool] = None, pipeline_depth: int = 2,
-                 continuous_out_cap: Optional[int] = 65536):
+                 continuous_out_cap: Optional[int] = 65536,
+                 device=None):
         self.site = site
         self.backend = backend
         self.mesh = mesh
+        if device is not None and mesh is not None:
+            raise ValueError(
+                "pass mesh= (shard stacks over devices) OR device= (pin a "
+                "federation site to one device), not both")
+        self.device = device
         self.rules = rules or specs.DEFAULT_RULES
         self.stacks: Dict[Any, _KindStack] = {}
         self.entries: Dict[str, _Entry] = {}
@@ -256,7 +274,8 @@ class SDE:
         self._cq_groups: Optional[Dict[Any, Any]] = None
 
     def _new_stack(self, kind: Synopsis, capacity: int = 64) -> _KindStack:
-        return _KindStack(kind, capacity, mesh=self.mesh, rules=self.rules)
+        return _KindStack(kind, capacity, mesh=self.mesh, rules=self.rules,
+                          device=self.device)
 
     # ------------------------------------------------------------------
     # red path: requests
@@ -781,6 +800,16 @@ class SDE:
         # own log before its state is read (state_of fences `other` too)
         self.flush()
         other.flush()
+        # engines pinned to different federation sites hold committed
+        # arrays on different devices, which cannot mix in one dispatch:
+        # pull the absorbed engine's contributions through host numpy
+        # (uncommitted) so the merge programs run where THIS engine lives
+        cross = ((self.device is not None or other.device is not None)
+                 and self.device is not other.device)
+
+        def pull(state):
+            return jax.tree.map(np.asarray, state) if cross else state
+
         matches: Dict[Any, tuple[list[int], list[int]]] = {}
         transfers = []
         for sid, oe in other.entries.items():
@@ -800,7 +829,8 @@ class SDE:
             stack = self.stacks[kind]
             stack.state = federated.merge_rows(
                 kind, stack.state, jnp.asarray(rows_a, jnp.int32),
-                other.stacks[kind].state, jnp.asarray(rows_b, jnp.int32))
+                pull(other.stacks[kind].state),
+                jnp.asarray(rows_b, jnp.int32))
         routed_by_kind: Dict[Any, List[tuple]] = {}
         for sid, oe in transfers:
             kind = oe.kind_key
@@ -809,7 +839,7 @@ class SDE:
             stack = self.stacks[kind]
             row = stack.alloc()
             stack.state = batched.set_row(stack.state, row,
-                                          other.state_of(sid))
+                                          pull(other.state_of(sid)))
             if oe.stream_id is None:
                 stack.mark_source(row)
             else:
@@ -1004,24 +1034,94 @@ def _plan_queries(kind, queries: Sequence[Dict[str, Any]]):
 # Federation (yellow path): one SDE per geo-dispersed site
 # ---------------------------------------------------------------------------
 class Federation:
-    """Simulates the paper's multi-cluster deployment: each site runs its
-    own SDE; federated queries are merged at the responsible site. The
-    bytes shipped per estimate are exactly the synopsis state size —
-    reported by ``query_bytes`` (fig 5d)."""
+    """The paper's multi-cluster deployment: each site runs its own SDE;
+    federated queries are synthesized at the responsible site.
 
-    def __init__(self, sites: List[str], backend: str = "xla"):
-        self.sdes = {s: SDE(site=s, backend=backend) for s in sites}
+    Pass a ``mesh`` carrying a ``site`` axis (``launch.mesh.
+    make_federation_mesh``) — or a production multi-pod mesh, whose
+    ``pod`` axis plays the site role over DCN — to run federation as a
+    REAL collective: each site's SDE state is pinned to its slice of the
+    axis (ingest executes site-locally on that device), and
+    ``query_federated`` runs ONE shard_map-ped program in which
+    ``federated.merge_over_axis`` merges the partial states via
+    psum/pmax/all_gather and the stacked estimate executes on the merged
+    result (``kernels.ops.estimate_collective``). Without a mesh the
+    legacy single-device path gathers host copies and merges them at the
+    responsible site (``kernels.ops.estimate_merged``) — the oracle the
+    collective path is tested byte-identical against.
+
+    The bytes a federated answer ships are reported per query (fig 5d):
+    ``query_bytes`` (host-merge: every site's state) and
+    ``collective_query_bytes`` (the collective's operand bytes)."""
+
+    def __init__(self, sites: List[str], backend: str = "xla",
+                 mesh: Optional[Mesh] = None):
+        self.sites = list(sites)
+        self.mesh = mesh
+        self.site_axis: Optional[str] = None
+        self.fed_mesh: Optional[Mesh] = None    # 1-D lead-device submesh
+        self._site_devices = None
+        if mesh is not None and not mesh.empty:
+            for ax in ("site", "pod"):
+                if ax in mesh.axis_names:
+                    self.site_axis = ax
+                    break
+            if self.site_axis is None:
+                raise ValueError(
+                    "federation mesh needs a 'site' or 'pod' axis (use "
+                    "launch.mesh.make_federation_mesh, or a multi-pod "
+                    f"production mesh); got axes {mesh.axis_names}")
+            n = mesh.shape[self.site_axis]
+            if n != len(self.sites):
+                raise ValueError(
+                    f"mesh axis {self.site_axis!r} has {n} slices for "
+                    f"{len(self.sites)} sites; one slice per site")
+            # one lead device per site slice: the DCN endpoint of the site
+            idx = mesh.axis_names.index(self.site_axis)
+            dev_nd = np.moveaxis(np.asarray(mesh.devices), idx, 0)
+            self._site_devices = list(dev_nd.reshape(n, -1)[:, 0])
+            self.fed_mesh = Mesh(np.asarray(self._site_devices),
+                                 (self.site_axis,))
+            self.sdes = {s: SDE(site=s, backend=backend, device=d)
+                         for s, d in zip(self.sites, self._site_devices)}
+        else:
+            self.sdes = {s: SDE(site=s, backend=backend)
+                         for s in self.sites}
 
     def broadcast(self, snippet: str | dict) -> Dict[str, api.Response]:
         return {s: sde.handle(snippet) for s, sde in self.sdes.items()}
 
-    def query_federated(self, synopsis_id: str, query: Dict[str, Any],
-                        responsible: str):
-        """Case 2/3: ship partial synopses to the responsible site, merge
-        (mergeability), estimate once — the tree merge and the estimate
-        are fused into ONE jitted program (``kernels.ops.estimate_merged``)
-        riding the same stacked-estimate entry point as the local red
-        path."""
+    def handle(self, snippet: str | dict):
+        """JSON entry point for federated workflows: ``federated_query``
+        requests are answered once at the responsible site (collective
+        merge on a mesh federation, host merge otherwise), with the
+        fig 5d byte metrics in the response's ``params``; every other
+        request type — including anything that fails to parse — is
+        broadcast to all sites (returns ``{site: Response}``, per-site
+        error responses for malformed snippets, so the return shape only
+        depends on the request type, never on validity)."""
+        try:
+            req = api.parse_request(snippet)
+        except Exception:  # noqa: BLE001 - malformed: keep broadcast shape
+            return self.broadcast(snippet)
+        if not isinstance(req, api.FederatedQuery):
+            return self.broadcast(snippet)
+        try:
+            value, info = self._query_federated(
+                req.synopsis_id, req.query, req.responsible_site)
+            return api.Response(request_id=req.request_id,
+                                synopsis_id=req.synopsis_id,
+                                value=value, params=info)
+        except Exception as e:  # noqa: BLE001 - service returns errors
+            return api.Response(request_id=req.request_id,
+                                synopsis_id=req.synopsis_id,
+                                ok=False, error=repr(e))
+
+    def _partial_states(self, synopsis_id: str):
+        """(kind, per-site partial states, full-coverage flag). Reading a
+        site's state fences its pipeline first (``state_of`` flushes), so
+        a federated answer observes every ingested batch even under
+        pipelined blue paths."""
         states, kind = [], None
         for sde in self.sdes.values():
             if synopsis_id in sde.entries:
@@ -1029,14 +1129,72 @@ class Federation:
                 states.append(sde.state_of(synopsis_id))
         if kind is None:
             raise KeyError(synopsis_id)
+        return kind, states, len(states) == len(self.sdes)
+
+    def _site_stacked(self, states: List[Any]) -> Any:
+        """Stack per-site partial states into ONE [S, ...] pytree sharded
+        over the site axis — zero-copy: shard s is site s's already
+        device-resident state, so building the collective's operand ships
+        nothing before the program runs."""
+        sharding = NamedSharding(self.fed_mesh, P(self.site_axis))
+
+        def stack(*leaves):
+            shards = [jax.device_put(leaf[None], d)
+                      for leaf, d in zip(leaves, self._site_devices)]
+            return jax.make_array_from_single_device_arrays(
+                (len(leaves),) + leaves[0].shape, sharding, shards)
+
+        return jax.tree.map(stack, *states)
+
+    def query_federated(self, synopsis_id: str, query: Dict[str, Any],
+                        responsible: str):
+        """Case 2/3: merge every site's partial synopsis and estimate
+        once at the responsible site. On a mesh federation the merge is a
+        real collective over the site axis fused with the estimate into
+        ONE compiled program (``kernels.ops.estimate_collective``); off
+        mesh, the partials are gathered and tree-merged on the
+        responsible host (``kernels.ops.estimate_merged``). Both paths
+        ride the same stacked-estimate entry point as the local red path
+        and return byte-identical results."""
+        value, _ = self._query_federated(synopsis_id, query, responsible)
+        return value
+
+    def _query_federated(self, synopsis_id: str, query: Dict[str, Any],
+                         responsible: str):
+        kind, states, covered = self._partial_states(synopsis_id)
         args, take, errors = _plan_queries(kind, [query or {}])
         if errors[0] is not None:
             raise ValueError(errors[0])
-        out = kops.estimate_merged(kind, federated.stack_states(states),
-                                   *args)
-        return take(jax.tree.map(np.asarray, out), 0)
+        host_bytes = sum(
+            federated.communication_bytes(kind, s) for s in states)
+        info = dict(sites=len(states), responsible_site=responsible,
+                    host_merge_bytes=host_bytes)
+        if self.fed_mesh is not None and covered:
+            # the collective path spans the WHOLE axis: it needs one
+            # partial per slice (a federated build is broadcast, so this
+            # is the common case)
+            out = kops.estimate_collective(
+                kind, self._site_stacked(states), *args,
+                mesh=self.fed_mesh, axis_name=self.site_axis)
+            info.update(path="collective",
+                        collective_operand_bytes=federated.
+                        collective_operand_bytes(kind, states[0],
+                                                 len(states)))
+        else:
+            if self.fed_mesh is not None:
+                # partial coverage: fall back to the host merge — pull
+                # the site-committed partials through host numpy so one
+                # device can fold them
+                states = [jax.tree.map(np.asarray, s) for s in states]
+            out = kops.estimate_merged(
+                kind, federated.stack_states(states), *args)
+            info.update(path="host", collective_operand_bytes=host_bytes)
+        return take(jax.tree.map(np.asarray, out), 0), info
 
     def query_bytes(self, synopsis_id: str) -> int:
+        """Host-merge shipped bytes: every site sends its state to the
+        responsible site (what the legacy path actually ships, and the
+        fig 5d baseline the collective is compared against)."""
         total = 0
         for sde in self.sdes.values():
             if synopsis_id in sde.entries:
@@ -1044,3 +1202,12 @@ class Federation:
                     sde.entries[synopsis_id].kind_key,
                     sde.state_of(synopsis_id))
         return total
+
+    def collective_query_bytes(self, synopsis_id: str) -> int:
+        """Operand bytes the collective path ships across the site axis
+        for one federated estimate (fig 5d): in-network psum/pmax
+        reduction makes this independent of the site count for sum/max
+        kinds. Never exceeds ``query_bytes``."""
+        kind, states, _ = self._partial_states(synopsis_id)
+        return federated.collective_operand_bytes(kind, states[0],
+                                                  len(states))
