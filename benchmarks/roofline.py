@@ -1,7 +1,26 @@
 """Aggregate dry-run records into the roofline table (EXPERIMENTS.md
-§Roofline reads this output).
+§Roofline reads this output), and gate the fused Pallas update kernels.
 
   PYTHONPATH=src python -m benchmarks.roofline --dir benchmarks/out
+  PYTHONPATH=src python -m benchmarks.roofline --check [--shape full]
+
+``--check`` runs every registered update kernel (kernels.ops registry)
+fused and unfused in interpret mode, proves the Pallas states are
+byte-identical to the XLA reference path, and models the HBM bytes each
+form moves per batch:
+
+  fused     = R+W state (aliased) + R table mirror + R batch
+  unfused   = probe pass (R table + R sids, W rows) + kernel pass
+              (R rows + R batch + state traffic) — where the CM/AMS
+              delta-buffer form pays 4 state-sized passes (W delta,
+              R delta, R counts, W out) against the fused form's 2.
+
+Per-kernel thresholds: the delta-buffer kinds (countmin_scatter,
+ams_scatter) must model >= 1.2x; the already-aliased single-pass kinds
+(hll_max, bloom_bitset, fm_bitmap, rhp_project) must not regress
+(>= 1.0x) and are gated on byte equality. Records land next to the
+dry-run records with ``mesh_name="cpu-interpret"`` so ``table()`` can
+filter them the same way.
 """
 from __future__ import annotations
 
@@ -9,14 +28,39 @@ import argparse
 import glob
 import json
 import os
+import sys
+import time
 from typing import Dict, List
+
+# kernel-gate cases: (registry kernel, api kind, params, min modeled gain)
+_GATE = [
+    ("countmin_scatter", "countmin",
+     {"eps": 0.1, "delta": 0.1, "weighted": False}, 1.2),
+    ("ams_scatter", "ams", {"eps": 0.1, "delta": 0.1}, 1.2),
+    ("hll_max", "hyperloglog", {"rse": 0.1}, 1.0),
+    ("bloom_bitset", "bloom", {"n_elements": 64, "fpr": 0.05}, 1.0),
+    ("fm_bitmap", "fm", {}, 1.0),
+    ("rhp_project", "rhp", {"n_bits": 64}, 1.0),
+]
+_DELTA_KINDS = ("countmin_scatter", "ams_scatter")
+# per-tuple batch bytes: hashed sid halves (2 x u32) + value f32 + mask
+_TUPLE_B = 13
+# per-tuple probe-path extra: R sids in probe (8) + W rows (4) + R rows
+# in the scatter kernel (4) — the bytes fusion deletes
+_PROBE_B = 16
 
 
 def load(dir_: str) -> List[Dict]:
     out = []
     for p in sorted(glob.glob(os.path.join(dir_, "*.json"))):
         with open(p) as f:
-            out.append(json.load(f))
+            r = json.load(f)
+        # legacy skip/error records stuffed the mesh NAME into ``mesh``
+        # (ok records hold a dict there) — normalize so every record
+        # carries ``mesh_name`` and table() can filter on one field
+        if "mesh_name" not in r and isinstance(r.get("mesh"), str):
+            r["mesh_name"] = r["mesh"]
+        out.append(r)
     return out
 
 
@@ -27,15 +71,14 @@ def _fmt_bytes(b):
 
 
 def table(records: List[Dict], mesh: str = "pod16x16") -> str:
+    recs = [r for r in records
+            if "arch" in r and r.get("mesh_name") == mesh]
     lines = [
         "| arch | shape | dom | compute_s | memory_s | coll_s | "
         "useful/HLO | roofline frac | HBM GiB/dev | note |",
         "|---|---|---|---|---|---|---|---|---|---|",
     ]
-    for r in sorted(records, key=lambda x: (x["arch"], x["shape"])):
-        if r.get("mesh_name", r.get("mesh")) not in (mesh,) and \
-           not (isinstance(r.get("mesh"), str) and r["mesh"] == mesh):
-            continue
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"])):
         if "skipped" in r:
             lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — |"
                          f" — | — | — | {r['skipped'][:40]} |")
@@ -52,6 +95,7 @@ def table(records: List[Dict], mesh: str = "pod16x16") -> str:
             f"| {ro['collective_s']:.3f} | {ro['hlo_useful_ratio']:.2f} "
             f"| {ro['roofline_fraction']:.3f} "
             f"| {_fmt_bytes(pd.get('peak_bytes'))} | |")
+    lines.append(f"\n{len(recs)} dry-run record(s) on mesh `{mesh}`")
     return "\n".join(lines)
 
 
@@ -72,11 +116,133 @@ def summary(records: List[Dict]) -> Dict:
     )
 
 
+# ---------------------------------------------------------------------------
+# fused-kernel acceptance gate (--check)
+# ---------------------------------------------------------------------------
+def kernel_records(shape: str = "gate") -> List[Dict]:
+    """One record per registry kernel: byte equality of the Pallas
+    states (fused AND unfused) against the XLA reference engine, plus
+    the modeled HBM traffic of each form at the gate shape."""
+    import numpy as np
+    import jax
+    from repro.service import SDE
+
+    # gate shapes keep the interpret-mode grids tiny (CI runs this on
+    # CPU); --shape full scales to the 1024-synopsis acceptance point,
+    # where the modeled gain is state-dominated
+    full = shape == "full"
+    n_syn = 1024 if full else 16
+    t_tuples = 4096 if full else 512
+
+    rng = np.random.RandomState(11)
+    pop = np.unique(rng.randint(0, 2**62, size=4 * n_syn,
+                                dtype=np.int64))[:n_syn]
+    sids = pop[rng.randint(0, n_syn, t_tuples)]
+    # sprinkle ids outside the routed population — the probe's miss
+    # (-1) path must round-trip through every kernel form too
+    sids[::max(t_tuples // 16, 1)] = int(pop.max()) + 1
+    vals = rng.randint(1, 5, t_tuples).astype(np.float32)
+
+    records = []
+    for kernel, kind_name, params, min_gain in _GATE:
+        states, wall, s_bytes, tbl_bytes = {}, None, None, None
+        for backend, fuse in (("xla", "1"), ("pallas", "0"),
+                              ("pallas", "1")):
+            os.environ["SDE_FUSED_PROBE"] = fuse
+            try:
+                eng = SDE(backend=backend)
+                r = eng.handle({
+                    "type": "build", "request_id": "b",
+                    "synopsis_id": "g", "kind": kind_name,
+                    "params": params, "per_stream_of_source": True,
+                    "stream_ids": [int(s) for s in pop]})
+                assert r.ok, r.error
+                t0 = time.perf_counter()
+                eng.ingest(sids, vals)
+                jax.block_until_ready(
+                    [s.state for s in eng.stacks.values()])
+                dt = time.perf_counter() - t0
+            finally:
+                os.environ.pop("SDE_FUSED_PROBE", None)
+            stack = next(iter(eng.stacks.values()))
+            states[(backend, fuse)] = np.asarray(stack.state)
+            if (backend, fuse) == ("pallas", "1"):
+                wall = dt
+                s_bytes = states[(backend, fuse)].nbytes
+                tbl_bytes = sum(np.asarray(a).nbytes
+                                for a in stack.device_table())
+            eng.close()
+        byte_equal = (
+            np.array_equal(states[("xla", "1")], states[("pallas", "1")])
+            and np.array_equal(states[("xla", "1")],
+                               states[("pallas", "0")]))
+        state_passes = 4 if kernel in _DELTA_KINDS else 2
+        fused = 2 * s_bytes + tbl_bytes + _TUPLE_B * t_tuples
+        unfused = (state_passes * s_bytes + tbl_bytes
+                   + (_TUPLE_B + _PROBE_B) * t_tuples)
+        records.append(dict(
+            kernel=kernel, kind=kind_name, shape=shape,
+            n_synopses=n_syn, batch_tuples=t_tuples,
+            state_bytes=s_bytes, table_bytes=tbl_bytes,
+            fused_hbm_bytes=fused, unfused_hbm_bytes=unfused,
+            modeled_gain=round(unfused / fused, 3), min_gain=min_gain,
+            byte_equal=bool(byte_equal),
+            wall_seconds_fused=round(wall, 4),
+            backend="pallas", interpret=True,
+            mesh_name="cpu-interpret"))
+    return records
+
+
+def check(records: List[Dict], out_dir: str = None) -> List[str]:
+    """Print the gate table, persist the records, return failures."""
+    failures = []
+    lines = [
+        "| kernel | n_syn | batch | modeled gain | min | bytes | ok |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in records:
+        ok = r["byte_equal"] and r["modeled_gain"] >= r["min_gain"]
+        if not r["byte_equal"]:
+            failures.append(f"{r['kernel']}: pallas != xla state bytes")
+        elif not ok:
+            failures.append(
+                f"{r['kernel']}: modeled gain {r['modeled_gain']}x "
+                f"< required {r['min_gain']}x")
+        lines.append(
+            f"| {r['kernel']} | {r['n_synopses']} | {r['batch_tuples']} "
+            f"| {r['modeled_gain']:.2f}x | {r['min_gain']:.1f}x "
+            f"| {'equal' if r['byte_equal'] else 'DIFFER'} "
+            f"| {'PASS' if ok else 'FAIL'} |")
+    print("\n".join(lines))
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        for r in records:
+            path = os.path.join(
+                out_dir, f"kernel__{r['kernel']}__{r['shape']}.json")
+            with open(path, "w") as f:
+                json.dump(r, f, indent=1)
+        print(f"\n{len(records)} kernel record(s) -> {out_dir}")
+    return failures
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="benchmarks/out")
     ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--check", action="store_true",
+                    help="run the fused-kernel acceptance gate")
+    ap.add_argument("--shape", default="gate", choices=["gate", "full"],
+                    help="--check problem size (full = 1024 synopses)")
     args = ap.parse_args()
+
+    if args.check:
+        failures = check(kernel_records(args.shape), out_dir=args.dir)
+        if failures:
+            print("\nFAIL:\n  " + "\n  ".join(failures))
+            sys.exit(1)
+        print("\nall update kernels pass the roofline gate")
+        return
+
     records = load(args.dir)
     print(table(records, args.mesh))
     print()

@@ -73,6 +73,38 @@ def main():
           f"(latest cardinality "
           f"{float(psde.continuous_out[-1].value):,.0f})")
 
+    # 2c. Pallas backend: `SDE(backend="pallas")` (or SDE_BACKEND=pallas)
+    #     runs the blue path through hand-written Pallas kernels instead
+    #     of XLA's scatter lowering. Every scatter kind covers it —
+    #     countmin, ams, hyperloglog, bloom, fm and rhp each declare
+    #     `update_kernel = "<name>"` resolved from the kernels.ops
+    #     registry at dispatch (no isinstance ladder); scan kinds and the
+    #     DFT step path fall back to the same XLA programs as backend=
+    #     "xla". By default the routing probe runs INSIDE the kernel grid
+    #     (one HBM pass over state + table per kind per batch;
+    #     SDE_FUSED_PROBE=0 splits it out again), and states stay
+    #     byte-identical to the XLA backend either way — that equivalence
+    #     plus the modeled HBM gain is CI-gated by
+    #     `python -m benchmarks.roofline --check` (EXPERIMENTS.md
+    #     §Roofline). Off-TPU the kernels run in interpret mode
+    #     (override with SDE_PALLAS_INTERPRET=0/1). A plugged kind reuses
+    #     a stock kernel by declaring its name, or brings its own via
+    #     `kernels.ops.register_update_kernel(name, builder)`.
+    ksde = SDE(backend="pallas")
+    resp = ksde.handle({"type": "build", "request_id": "k1",
+                        "synopsis_id": "kbids", "kind": "countmin",
+                        "params": {"eps": 0.1, "delta": 0.1},
+                        "per_stream_of_source": True, "n_streams": 500,
+                        "source_id": "stocks"})
+    assert resp.ok, resp.error
+    kstock = StockStream(n_streams=500, group_size=10, seed=0)
+    for _ in range(4):
+        ksde.ingest(*kstock.level1_batch(2000))
+    q = ksde.handle({"type": "adhoc", "request_id": "kq",
+                     "synopsis_id": "kbids/42", "query": {"items": [42]}})
+    print(f"\npallas backend: stock 42 bid volume (CM) "
+          f"{float(q.value[0]):,.1f} via fused probe+update kernel")
+
     # 3. Ad-hoc queries (red path).
     q = sde.handle({"type": "adhoc", "request_id": "q1",
                     "synopsis_id": "cardinality"})

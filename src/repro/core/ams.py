@@ -26,6 +26,7 @@ class AMS:
     seed: int = 13
 
     merge_mode = "sum"
+    update_kernel = "ams_scatter"        # kernels.ops registry name
 
     @property
     def depth(self) -> int:

@@ -25,6 +25,7 @@ class BloomFilter:
     seed: int = 17
 
     merge_mode = "max"
+    update_kernel = "bloom_bitset"       # kernels.ops registry name
 
     @property
     def log2_bits(self) -> int:

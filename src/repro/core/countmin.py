@@ -30,6 +30,7 @@ class CountMin:
     weighted: bool = True   # value-weighted counts (paper uses counts of bids)
 
     merge_mode = "sum"      # linear sketch -> federated merge is one psum
+    update_kernel = "countmin_scatter"   # kernels.ops registry name
 
     @property
     def depth(self) -> int:

@@ -29,6 +29,7 @@ class FMSketch:
     seed: int = 19
 
     merge_mode = "max"       # bitmap OR == max on {0,1}
+    update_kernel = "fm_bitmap"          # kernels.ops registry name
 
     @property
     def log2_nmaps(self) -> int:

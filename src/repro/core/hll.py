@@ -34,6 +34,7 @@ class HyperLogLog:
     seed: int = 11
 
     merge_mode = "max"           # federated merge is one pmax
+    update_kernel = "hll_max"            # kernels.ops registry name
 
     @property
     def p(self) -> int:

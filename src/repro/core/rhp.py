@@ -28,6 +28,7 @@ class RHP:
     seed: int = 29
 
     merge_mode = "sum"
+    update_kernel = "rhp_project"        # kernels.ops registry name
 
     def _seeds(self) -> jax.Array:
         return jnp.asarray(hashing.row_seeds(self.seed, self.n_bits))

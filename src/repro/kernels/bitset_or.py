@@ -1,0 +1,150 @@
+"""Stacked bit-set OR kernel: k-position max-scatter into [n, m] bitsets.
+
+Serves every bit-vector sketch whose update sets a handful of positions
+per tuple and whose merge is OR (== max on {0, 1} int32 lanes):
+
+  * Bloom filters: k hash positions per tuple (``idx [T, k]``);
+  * FM/PCSA bitmaps via ``fm_bitmap.py``: one flattened (map, bit)
+    position per tuple (k == 1).
+
+Update rule per grid cell (hash h, synopsis tile s, bit tile m):
+
+    bits[syn, m] |= upd_t * [syn_t == syn] * [idx_t[h] == m]
+
+materialized as the same [T_t, S_t, M_t] one-hot max cube as the HLL
+kernel (max has no matmul form). Grid: (k, S_tiles, M_tiles, T_tiles) —
+T innermost so each output tile accumulates in VMEM across the batch
+sweep; the k axis is outermost, so each output tile is revisited once per
+hash function and max-folded (init happens at h == 0, t == 0).
+
+Both entry points are provided: :func:`bitset_max_update` takes routed
+rows (probe-then-scatter), :func:`bitset_probe_max_update` fuses the
+routing probe into the kernel (one HBM pass; see onehot_matmul for the
+scratch-cached probe pattern).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import probe
+
+
+def _cube(syn, pos, upd, s, m_, *, s_tile, m_tile):
+    s_ids = s * s_tile + jax.lax.broadcasted_iota(jnp.int32, (1, s_tile), 1)
+    m_ids = m_ * m_tile + jax.lax.broadcasted_iota(jnp.int32, (1, m_tile), 1)
+    cmp_s = (syn[:, None] == s_ids)                        # [T_t, S_t]
+    cmp_m = (pos[:, None] == m_ids)                        # [T_t, M_t]
+    cube = jnp.where(cmp_s[:, :, None] & cmp_m[:, None, :],
+                     upd[:, None, None], 0)                # [T_t, S_t, M_t]
+    return jnp.max(cube, axis=0)
+
+
+def _kernel(bits_ref, syn_ref, idx_ref, upd_ref, out_ref, *, s_tile, m_tile):
+    h = pl.program_id(0)
+    s = pl.program_id(1)
+    m_ = pl.program_id(2)
+    t = pl.program_id(3)
+    tile = _cube(syn_ref[...], idx_ref[..., 0], upd_ref[...], s, m_,
+                 s_tile=s_tile, m_tile=m_tile)
+
+    @pl.when((h == 0) & (t == 0))
+    def _init():
+        out_ref[...] = jnp.maximum(bits_ref[...], tile)
+
+    @pl.when((h > 0) | (t > 0))
+    def _acc():
+        out_ref[...] = jnp.maximum(out_ref[...], tile)
+
+
+@functools.partial(jax.jit, static_argnames=("s_tile", "m_tile", "t_tile",
+                                             "interpret"))
+def bitset_max_update(bits: jax.Array, syn_idx: jax.Array, idx: jax.Array,
+                      upd: jax.Array, *, s_tile: int = 8, m_tile: int = 128,
+                      t_tile: int = 128, interpret: bool = True) -> jax.Array:
+    """bits [n, m] i32 |= scatter of T tuples at idx [T, k]; upd [T] i32
+    is 0/1 (0 = masked no-op, and syn_idx -1 matches no row). All dims
+    must be tile multiples (ops.py pads)."""
+    n, m = bits.shape
+    t_total, k = idx.shape
+    grid = (k, n // s_tile, m // m_tile, t_total // t_tile)
+    return pl.pallas_call(
+        functools.partial(_kernel, s_tile=s_tile, m_tile=m_tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((s_tile, m_tile), lambda h, s, m_, t: (s, m_)),
+            pl.BlockSpec((t_tile,), lambda h, s, m_, t: (t,)),
+            pl.BlockSpec((t_tile, 1), lambda h, s, m_, t: (t, h)),
+            pl.BlockSpec((t_tile,), lambda h, s, m_, t: (t,)),
+        ],
+        out_specs=pl.BlockSpec((s_tile, m_tile), lambda h, s, m_, t: (s, m_)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.int32),
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(bits, syn_idx, idx, upd)
+
+
+def _fused_kernel(bits_ref, klo_ref, khi_ref, trw_ref, slo_ref, shi_ref,
+                  idx_ref, upd_ref, out_ref, syn_ref, *, s_tile, m_tile,
+                  t_tile, n_probe):
+    h = pl.program_id(0)
+    s = pl.program_id(1)
+    m_ = pl.program_id(2)
+    t = pl.program_id(3)
+
+    @pl.when((h == 0) & (s == 0) & (m_ == 0))
+    def _probe():
+        syn_ref[pl.ds(t * t_tile, t_tile)] = probe.probe_rows(
+            klo_ref[...], khi_ref[...], trw_ref[...],
+            slo_ref[...], shi_ref[...], n_probe=n_probe)
+
+    syn = syn_ref[pl.ds(t * t_tile, t_tile)]
+    tile = _cube(syn, idx_ref[..., 0], upd_ref[...], s, m_,
+                 s_tile=s_tile, m_tile=m_tile)
+
+    @pl.when((h == 0) & (t == 0))
+    def _init():
+        out_ref[...] = jnp.maximum(bits_ref[...], tile)
+
+    @pl.when((h > 0) | (t > 0))
+    def _acc():
+        out_ref[...] = jnp.maximum(out_ref[...], tile)
+
+
+@functools.partial(jax.jit, static_argnames=("n_probe", "s_tile", "m_tile",
+                                             "t_tile", "interpret"))
+def bitset_probe_max_update(bits: jax.Array, keys_lo: jax.Array,
+                            keys_hi: jax.Array, table_rows: jax.Array,
+                            sid_lo: jax.Array, sid_hi: jax.Array,
+                            idx: jax.Array, upd: jax.Array, *, n_probe: int,
+                            s_tile: int = 8, m_tile: int = 128,
+                            t_tile: int = 128,
+                            interpret: bool = True) -> jax.Array:
+    """Fused routing probe + bit-set max-scatter, one HBM pass."""
+    n, m = bits.shape
+    t_total, k = idx.shape
+    size = keys_lo.shape[0]
+    grid = (k, n // s_tile, m // m_tile, t_total // t_tile)
+    tbl = lambda: pl.BlockSpec((size,), lambda h, s, m_, t: (0,))
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, s_tile=s_tile, m_tile=m_tile,
+                          t_tile=t_tile, n_probe=n_probe),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((s_tile, m_tile), lambda h, s, m_, t: (s, m_)),
+            tbl(), tbl(), tbl(),
+            pl.BlockSpec((t_tile,), lambda h, s, m_, t: (t,)),
+            pl.BlockSpec((t_tile,), lambda h, s, m_, t: (t,)),
+            pl.BlockSpec((t_tile, 1), lambda h, s, m_, t: (t, h)),
+            pl.BlockSpec((t_tile,), lambda h, s, m_, t: (t,)),
+        ],
+        out_specs=pl.BlockSpec((s_tile, m_tile), lambda h, s, m_, t: (s, m_)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((t_total,), jnp.int32)],
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(bits, keys_lo, keys_hi, table_rows, sid_lo, sid_hi, idx, upd)

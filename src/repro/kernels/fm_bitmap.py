@@ -1,0 +1,65 @@
+"""FM/PCSA bitmap update on the bit-set kernel.
+
+An FM sketch is ``nmaps`` bitmaps of ``bitmap_size`` bits per synopsis
+([n, maps, bits] int32 0/1); each tuple sets ONE bit: position
+``rho = ctz(hash)`` of bitmap ``which = top-bits(hash)``. Flattening the
+(map, bit) plane to a single axis turns the update into exactly the
+k == 1 case of the generic bit-set OR kernel (``bitset_or.py``):
+
+    flat_pos = which * bitmap_size + pos          # in [0, maps*bits)
+    flat[syn, flat_pos] |= mask
+
+The reshape [n, maps, bits] <-> [n, maps*bits] is a row-major layout
+no-op — XLA folds it into the kernel's operand/result, so the flattened
+call still makes one HBM pass over the state in the fused form.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import bitset_or
+
+
+def _flatten(state: jax.Array, which: jax.Array, pos: jax.Array,
+             bitmap_size: int, m_tile: int):
+    """Row-major flatten + zero-pad the flat axis to the bit tile (the
+    pad columns sit past every reachable flat_pos, so they stay zero)."""
+    n = state.shape[0]
+    flat = state.reshape(n, -1)
+    q = flat.shape[1]
+    q_pad = (-q) % m_tile
+    if q_pad:
+        flat = jnp.pad(flat, ((0, 0), (0, q_pad)))
+    flat_pos = (which * bitmap_size + pos).astype(jnp.int32)[:, None]
+    return flat, flat_pos, q
+
+
+def fm_bit_update(state: jax.Array, syn_idx: jax.Array, which: jax.Array,
+                  pos: jax.Array, upd: jax.Array, *, s_tile: int = 8,
+                  m_tile: int = 128, t_tile: int = 128,
+                  interpret: bool = True) -> jax.Array:
+    """state [n, maps, bits] i32 |= one bit per tuple at (which, pos).
+    upd [T] i32 0/1; syn_idx -1 matches no row. n and T must be tile
+    multiples (ops.py pads); the flat maps*bits axis is padded here."""
+    flat, flat_pos, q = _flatten(state, which, pos, state.shape[2], m_tile)
+    out = bitset_or.bitset_max_update(
+        flat, syn_idx, flat_pos, upd, s_tile=s_tile, m_tile=m_tile,
+        t_tile=t_tile, interpret=interpret)
+    return out[:, :q].reshape(state.shape)
+
+
+def fm_probe_bit_update(state: jax.Array, keys_lo: jax.Array,
+                        keys_hi: jax.Array, table_rows: jax.Array,
+                        sid_lo: jax.Array, sid_hi: jax.Array,
+                        which: jax.Array, pos: jax.Array, upd: jax.Array, *,
+                        n_probe: int, s_tile: int = 8, m_tile: int = 128,
+                        t_tile: int = 128,
+                        interpret: bool = True) -> jax.Array:
+    """Fused routing probe + FM bit scatter, one HBM pass."""
+    flat, flat_pos, q = _flatten(state, which, pos, state.shape[2], m_tile)
+    out = bitset_or.bitset_probe_max_update(
+        flat, keys_lo, keys_hi, table_rows, sid_lo, sid_hi, flat_pos, upd,
+        n_probe=n_probe, s_tile=s_tile, m_tile=m_tile, t_tile=t_tile,
+        interpret=interpret)
+    return out[:, :q].reshape(state.shape)

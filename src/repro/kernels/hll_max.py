@@ -16,6 +16,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import probe
 
 
 def _kernel(regs_ref, syn_ref, bkt_ref, rank_ref, out_ref, *, s_tile, m_tile):
@@ -66,3 +69,82 @@ def hll_max_update(regs: jax.Array, syn_idx: jax.Array, bucket: jax.Array,
         out_shape=jax.ShapeDtypeStruct((n, m), jnp.int32),
         interpret=interpret,
     )(regs, syn_idx, bucket, rank)
+
+
+# ---------------------------------------------------------------------------
+# fused probe + max-scatter: the routing probe runs INSIDE the kernel on the
+# first (s=0, m=0) sweep over T and caches routed rows in a VMEM scratch
+# shared across the sequential grid — one HBM pass per batch (see
+# onehot_matmul._fused_kernel for the pattern).
+# ---------------------------------------------------------------------------
+def _fused_kernel(regs_ref, klo_ref, khi_ref, trw_ref, slo_ref, shi_ref,
+                  bkt_ref, rank_ref, out_ref, syn_ref, *, s_tile, m_tile,
+                  t_tile, n_probe):
+    s = pl.program_id(0)
+    m_ = pl.program_id(1)
+    t = pl.program_id(2)
+
+    @pl.when((s == 0) & (m_ == 0))
+    def _probe():
+        syn_ref[pl.ds(t * t_tile, t_tile)] = probe.probe_rows(
+            klo_ref[...], khi_ref[...], trw_ref[...],
+            slo_ref[...], shi_ref[...], n_probe=n_probe)
+
+    syn = syn_ref[pl.ds(t * t_tile, t_tile)]        # -1 => matches no row
+    bkt = bkt_ref[...]
+    rank = rank_ref[...]
+
+    s_ids = s * s_tile + jax.lax.broadcasted_iota(jnp.int32, (1, s_tile), 1)
+    m_ids = m_ * m_tile + jax.lax.broadcasted_iota(jnp.int32, (1, m_tile), 1)
+    cmp_s = (syn[:, None] == s_ids)                       # [T_t, S_t]
+    cmp_m = (bkt[:, None] == m_ids)                       # [T_t, M_t]
+    cube = jnp.where(cmp_s[:, :, None] & cmp_m[:, None, :],
+                     rank[:, None, None], 0)              # [T_t, S_t, M_t]
+    tile = jnp.max(cube, axis=0)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.maximum(regs_ref[...], tile)
+
+    @pl.when(t > 0)
+    def _acc():
+        out_ref[...] = jnp.maximum(out_ref[...], tile)
+
+
+@functools.partial(jax.jit, static_argnames=("n_probe", "s_tile", "m_tile",
+                                             "t_tile", "interpret"))
+def hll_probe_max_update(regs: jax.Array, keys_lo: jax.Array,
+                         keys_hi: jax.Array, table_rows: jax.Array,
+                         sid_lo: jax.Array, sid_hi: jax.Array,
+                         bucket: jax.Array, rank: jax.Array, *,
+                         n_probe: int, s_tile: int = 8, m_tile: int = 128,
+                         t_tile: int = 128,
+                         interpret: bool = True) -> jax.Array:
+    """Fused routing probe + register max-scatter, one HBM pass.
+
+    regs [n, m] i32; keys_lo/keys_hi/table_rows: routing-table mirror;
+    sid_lo/sid_hi [T] uint32 halves; bucket/rank [T] i32 (rank 0 =
+    masked). All dims must be tile multiples (ops.py pads)."""
+    n, m = regs.shape
+    t_total = sid_lo.shape[0]
+    size = keys_lo.shape[0]
+    grid = (n // s_tile, m // m_tile, t_total // t_tile)
+    tbl = lambda: pl.BlockSpec((size,), lambda s, m_, t: (0,))
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, s_tile=s_tile, m_tile=m_tile,
+                          t_tile=t_tile, n_probe=n_probe),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((s_tile, m_tile), lambda s, m_, t: (s, m_)),
+            tbl(), tbl(), tbl(),
+            pl.BlockSpec((t_tile,), lambda s, m_, t: (t,)),
+            pl.BlockSpec((t_tile,), lambda s, m_, t: (t,)),
+            pl.BlockSpec((t_tile,), lambda s, m_, t: (t,)),
+            pl.BlockSpec((t_tile,), lambda s, m_, t: (t,)),
+        ],
+        out_specs=pl.BlockSpec((s_tile, m_tile), lambda s, m_, t: (s, m_)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((t_total,), jnp.int32)],
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(regs, keys_lo, keys_hi, table_rows, sid_lo, sid_hi, bucket, rank)

@@ -24,6 +24,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import probe
 
 
 def _kernel(syn_ref, idx_ref, val_ref, sgn_ref, out_ref, *, s_tile, w_tile):
@@ -85,3 +88,93 @@ def onehot_scatter_add(counts: jax.Array, syn_idx: jax.Array,
         interpret=interpret,
     )(syn_idx, idx, values, signs)
     return counts + delta
+
+
+# ---------------------------------------------------------------------------
+# fused probe + scatter: ONE HBM pass. The routing-table mirror rides into
+# VMEM as whole-array blocks; the first (j=0, s=0, w=0) sweep over T probes
+# each batch tile ONCE and caches the routed rows in a VMEM scratch shared
+# across the sequential grid; every later output tile re-reads the scratch.
+# The counts block is folded into the t == 0 accumulation (no separate
+# delta buffer, no `counts + delta` second pass) and the counts operand is
+# aliased to the output, so the state is updated in place.
+# ---------------------------------------------------------------------------
+def _fused_kernel(cnt_ref, klo_ref, khi_ref, trw_ref, slo_ref, shi_ref,
+                  idx_ref, val_ref, sgn_ref, out_ref, syn_ref, *,
+                  s_tile, w_tile, t_tile, n_probe):
+    j = pl.program_id(0)
+    s = pl.program_id(1)
+    w_ = pl.program_id(2)
+    t = pl.program_id(3)
+
+    @pl.when((j == 0) & (s == 0) & (w_ == 0))
+    def _probe():
+        syn_ref[pl.ds(t * t_tile, t_tile)] = probe.probe_rows(
+            klo_ref[...], khi_ref[...], trw_ref[...],
+            slo_ref[...], shi_ref[...], n_probe=n_probe)
+
+    syn = syn_ref[pl.ds(t * t_tile, t_tile)]        # -1 => matches no row
+    idx = idx_ref[..., 0]
+    val = val_ref[...] * sgn_ref[..., 0]
+
+    s_ids = s * s_tile + jax.lax.broadcasted_iota(jnp.int32, (1, s_tile), 1)
+    w_ids = w_ * w_tile + jax.lax.broadcasted_iota(jnp.int32, (1, w_tile), 1)
+    a = jnp.where(syn[:, None] == s_ids, val[:, None], 0.0)      # [T_t, S_t]
+    b = (idx[:, None] == w_ids).astype(jnp.float32)              # [T_t, W_t]
+    tile = jax.lax.dot_general(
+        a, b, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                      # [S_t, W_t]
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = cnt_ref[...] + tile[:, None, :]
+
+    @pl.when(t > 0)
+    def _acc():
+        out_ref[...] += tile[:, None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("n_probe", "s_tile", "w_tile",
+                                             "t_tile", "interpret"))
+def onehot_probe_scatter(counts: jax.Array, keys_lo: jax.Array,
+                         keys_hi: jax.Array, table_rows: jax.Array,
+                         sid_lo: jax.Array, sid_hi: jax.Array,
+                         idx: jax.Array, values: jax.Array,
+                         signs: jax.Array, *, n_probe: int,
+                         s_tile: int = 128, w_tile: int = 256,
+                         t_tile: int = 512,
+                         interpret: bool = True) -> jax.Array:
+    """Fused routing probe + one-hot scatter-add, one HBM pass.
+
+    counts [n, d, w] f32; keys_lo/keys_hi/table_rows: the routing-table
+    device mirror (pow2 size); sid_lo/sid_hi [T] uint32 stream-id halves;
+    idx [T, d] i32, values [T] f32 (mask pre-folded), signs [T, d] f32.
+    All dims must be tile multiples (ops.py pads; padded tuples carry
+    value 0 and/or an unroutable sid, so they are no-ops).
+    """
+    n, d, w = counts.shape
+    t_total = sid_lo.shape[0]
+    size = keys_lo.shape[0]
+    grid = (d, n // s_tile, w // w_tile, t_total // t_tile)
+    tbl = lambda: pl.BlockSpec((size,), lambda j, s, w_, t: (0,))
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, s_tile=s_tile, w_tile=w_tile,
+                          t_tile=t_tile, n_probe=n_probe),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((s_tile, 1, w_tile), lambda j, s, w_, t: (s, j, w_)),
+            tbl(), tbl(), tbl(),
+            pl.BlockSpec((t_tile,), lambda j, s, w_, t: (t,)),
+            pl.BlockSpec((t_tile,), lambda j, s, w_, t: (t,)),
+            pl.BlockSpec((t_tile, 1), lambda j, s, w_, t: (t, j)),
+            pl.BlockSpec((t_tile,), lambda j, s, w_, t: (t,)),
+            pl.BlockSpec((t_tile, 1), lambda j, s, w_, t: (t, j)),
+        ],
+        out_specs=pl.BlockSpec((s_tile, 1, w_tile),
+                               lambda j, s, w_, t: (s, j, w_)),
+        out_shape=jax.ShapeDtypeStruct((n, d, w), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((t_total,), jnp.int32)],
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(counts, keys_lo, keys_hi, table_rows, sid_lo, sid_hi,
+      idx, values, signs)

@@ -1,17 +1,28 @@
-"""Public jit'd wrappers around the Pallas kernels.
+"""Public jit'd wrappers around the Pallas kernels + the update-kernel
+registry.
 
 These are the entry points the engine uses. Each wrapper:
   * does the hashing / layout prep in plain jnp (cheap, fusable),
   * pads every dimension to its kernel tile,
   * picks interpret mode automatically (True off-TPU, so the kernels
-    VALIDATE on CPU and compile natively on TPU),
+    VALIDATE on CPU and compile natively on TPU; override with
+    ``SDE_PALLAS_INTERPRET=0/1``),
   * exposes the same signature as the core/ scatter path so the engine
     can flip between `backend="xla"` and `backend="pallas"`.
+
+Kernel dispatch is a REGISTRY, not a type ladder: a kind declares
+``update_kernel = "<name>"`` and :func:`resolve_update_kernel` returns the
+matching builder's update function — uniform signature, probe fused into
+the kernel when ``SDE_FUSED_PROBE`` is on (the default). Kinds without a
+declaration fall back to ``batched.stacked_update`` in the engine.
 """
 from __future__ import annotations
 
 import collections
 import functools
+import logging
+import os
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +30,10 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import batched, federated, hashing
-from . import onehot_matmul, hll_max, sliding_dft, pairwise_corr as pc
+from . import (bitset_or, fm_bitmap, hll_max, onehot_matmul, probe,
+               rhp_project, sliding_dft, pairwise_corr as pc)
+
+_logger = logging.getLogger("repro.kernels")
 
 if hasattr(jax, "shard_map"):
     _shard_map = jax.shard_map
@@ -32,8 +46,40 @@ else:
                                 out_specs=out_specs, check_rep=check_vma)
 
 
+_TRUTHY = ("1", "true", "yes", "on")
+_FALSY = ("0", "false", "no", "off")
+_interpret_logged = False
+
+
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    """Pallas interpret mode: auto (True off-TPU) unless overridden by
+    ``SDE_PALLAS_INTERPRET`` (1/true/yes/on or 0/false/no/off). The chosen
+    mode is logged once per process. Read at trace time — flipping the env
+    var mid-session only affects programs not yet traced."""
+    global _interpret_logged
+    raw = os.environ.get("SDE_PALLAS_INTERPRET", "").strip().lower()
+    if raw in _TRUTHY:
+        mode, why = True, f"SDE_PALLAS_INTERPRET={raw}"
+    elif raw in _FALSY:
+        mode, why = False, f"SDE_PALLAS_INTERPRET={raw}"
+    elif raw:
+        raise ValueError(
+            f"SDE_PALLAS_INTERPRET={raw!r} not understood — use one of "
+            f"{_TRUTHY + _FALSY} or unset for auto")
+    else:
+        mode = jax.default_backend() != "tpu"
+        why = f"auto (jax backend: {jax.default_backend()})"
+    if not _interpret_logged:
+        _logger.info("pallas interpret mode: %s [%s]", mode, why)
+        _interpret_logged = True
+    return mode
+
+
+def probe_fusion_enabled() -> bool:
+    """Whether registry kernels fuse the routing probe into the Pallas
+    grid (one HBM pass) — on unless ``SDE_FUSED_PROBE`` is falsy."""
+    return os.environ.get("SDE_FUSED_PROBE", "1").strip().lower() \
+        not in _FALSY
 
 
 def _pad_to(x: jax.Array, mult: int, axis: int = 0, value=0):
@@ -52,11 +98,14 @@ def _pad_to(x: jax.Array, mult: int, axis: int = 0, value=0):
 # owns the host-side inserts); this is the device half — a vectorized
 # fixed-bound linear probe traced INSIDE the fused update programs, so
 # routing arbitrary 63-bit stream ids still costs zero extra dispatches.
+# The probe math lives in kernels/probe.py so the SAME code runs both as
+# plain jnp here and inside the Pallas grids of the fused kernels.
 # ---------------------------------------------------------------------------
 
-_ROUTE_GOLDEN = jnp.uint32(0x9E3779B9)
-_ROUTE_EMPTY_HI = jnp.uint32(0xFFFFFFFF)   # hi half of an empty slot; valid
-                                           # ids < 2**63 have hi <= 2**31-1
+# hi half of an empty slot; valid ids < 2**63 have hi <= 2**31-1. Batch
+# padding uses it as the sid hi so padded lanes probe to row -1. (numpy
+# scalar: a bare python int overflows jit's weak-int32 argument parsing)
+_EMPTY_HI = np.uint32(0xFFFFFFFF)
 
 
 def route_probe(keys_lo: jax.Array, keys_hi: jax.Array, rows: jax.Array,
@@ -70,26 +119,18 @@ def route_probe(keys_lo: jax.Array, keys_hi: jax.Array, rows: jax.Array,
     plain jnp, fusable into the caller's single blue-path dispatch. The
     slot hash must stay in lockstep with ``service.routing.slot_hash``.
     """
-    size_mask = jnp.int32(keys_lo.shape[0] - 1)
-    sid_lo = sid_lo.astype(jnp.uint32)
-    sid_hi = sid_hi.astype(jnp.uint32)
-    h = hashing.mix32(sid_lo ^ hashing.mix32(sid_hi ^ _ROUTE_GOLDEN))
-    slot0 = (h & size_mask.astype(jnp.uint32)).astype(jnp.int32)
+    return probe.probe_rows(keys_lo, keys_hi, rows,
+                            sid_lo.astype(jnp.uint32),
+                            sid_hi.astype(jnp.uint32), n_probe=n_probe)
 
-    def body(_, carry):
-        row, slot, done = carry
-        k_hi = keys_hi[slot]
-        hit = (keys_lo[slot] == sid_lo) & (k_hi == sid_hi)
-        empty = k_hi == _ROUTE_EMPTY_HI
-        row = jnp.where(hit & ~done, rows[slot], row)
-        done = done | hit | empty
-        slot = jnp.where(done, slot, (slot + 1) & size_mask)
-        return row, slot, done
 
-    row0 = jnp.full(sid_lo.shape, -1, jnp.int32)
-    done0 = jnp.zeros(sid_lo.shape, bool)
-    row, _, _ = jax.lax.fori_loop(0, n_probe, body, (row0, slot0, done0))
-    return row
+def _pad_sids(sid_lo: jax.Array, sid_hi: jax.Array, t_tile: int):
+    """Pad a stream-id batch to the T tile: padded lanes get the
+    empty-slot hi pattern, which no occupied table slot carries, so the
+    in-kernel probe resolves them to -1 (match nothing)."""
+    lo = _pad_to(sid_lo.astype(jnp.uint32), t_tile)
+    hi = _pad_to(sid_hi.astype(jnp.uint32), t_tile, value=_EMPTY_HI)
+    return lo, hi
 
 
 def _source_fold(out: jax.Array, idx: jax.Array, contrib: jax.Array,
@@ -114,11 +155,14 @@ def _source_fold(out: jax.Array, idx: jax.Array, contrib: jax.Array,
 #
 # ``TRACE_COUNT`` increments at trace time only and ``DISPATCH_COUNT`` on
 # every call — tests use them to assert "one dispatch, one compiled program
-# per kind per query-batch shape".
+# per kind per query-batch shape". ``KERNEL_CACHE_SIZE`` gauges how many
+# compiled entries each KindCache holds (the caches are BOUNDED: engines
+# evict their kinds' entries on stop/close instead of growing forever).
 # ---------------------------------------------------------------------------
 
 TRACE_COUNT: collections.Counter = collections.Counter()
 DISPATCH_COUNT: collections.Counter = collections.Counter()
+KERNEL_CACHE_SIZE: collections.Counter = collections.Counter()
 
 # Blue-path pipeline probes: the engine's bounded ingest queue
 # (service/pipeline.py) reports how many dispatched-but-unmaterialized
@@ -137,18 +181,80 @@ def note_in_flight(tag: str, depth: int) -> None:
         PIPELINE_MAX_IN_FLIGHT[tag] = depth
 
 
-@functools.lru_cache(maxsize=None)
+_KIND_CACHES: list["KindCache"] = []
+
+
+class KindCache:
+    """Bounded replacement for the old ``lru_cache(maxsize=None)`` jit
+    caches: a dict keyed by tuples whose FIRST element is the kind
+    instance, so an engine can evict every compiled program belonging to
+    a kind it stops serving. Size is exported via ``KERNEL_CACHE_SIZE``
+    (one gauge per cache name)."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self._entries: Dict[tuple, Any] = {}
+        _KIND_CACHES.append(self)
+
+    def get(self, key: tuple, build: Callable[[], Any]) -> Any:
+        try:
+            return self._entries[key]
+        except KeyError:
+            pass
+        fn = self._entries[key] = build()
+        KERNEL_CACHE_SIZE[self.name] = len(self._entries)
+        return fn
+
+    def evict_kind(self, kind) -> int:
+        dead = [k for k in self._entries if k[0] == kind]
+        for k in dead:
+            del self._entries[k]
+        if dead:
+            KERNEL_CACHE_SIZE[self.name] = len(self._entries)
+        return len(dead)
+
+    def clear(self) -> int:
+        n = len(self._entries)
+        self._entries.clear()
+        KERNEL_CACHE_SIZE[self.name] = 0
+        return n
+
+
+def evict_kind_caches(kind) -> int:
+    """Drop every cached compiled program keyed to ``kind`` across all
+    registered caches (estimate + engine update/step). Returns the number
+    of entries evicted. Value-equal kind instances share entries, so this
+    only forgets programs no OTHER engine could be sharing once the kind
+    is value-unique to the evicting engine — eviction is a recompile-cost
+    policy, never a correctness concern."""
+    return sum(c.evict_kind(kind) for c in _KIND_CACHES)
+
+
+def kernel_cache_size() -> int:
+    """Total compiled entries across all kind caches (== the sum of the
+    ``KERNEL_CACHE_SIZE`` gauges)."""
+    return sum(len(c._entries) for c in _KIND_CACHES)
+
+
+_ESTIMATE_ALL = KindCache("estimate_all")
+_ESTIMATE_MERGED = KindCache("estimate_merged")
+_ESTIMATE_COLLECTIVE = KindCache("estimate_collective")
+
+
 def _estimate_all_fn(kind, out_sharding):
     name = type(kind).__name__
 
-    def program(state, rows, *query_args):
-        TRACE_COUNT[name] += 1          # runs only when jit (re)traces
-        return batched.stacked_estimate(kind, state, rows, *query_args)
+    def build():
+        def program(state, rows, *query_args):
+            TRACE_COUNT[name] += 1      # runs only when jit (re)traces
+            return batched.stacked_estimate(kind, state, rows, *query_args)
 
-    kw = {}
-    if out_sharding is not None:
-        kw["out_shardings"] = out_sharding
-    return jax.jit(program, **kw)
+        kw = {}
+        if out_sharding is not None:
+            kw["out_shardings"] = out_sharding
+        return jax.jit(program, **kw)
+
+    return _ESTIMATE_ALL.get((kind, out_sharding), build)
 
 
 def estimate_all(kind, state, rows: jax.Array, *query_args,
@@ -163,18 +269,20 @@ def estimate_all(kind, state, rows: jax.Array, *query_args,
     return _estimate_all_fn(kind, out_sharding)(state, rows, *query_args)
 
 
-@functools.lru_cache(maxsize=None)
 def _estimate_merged_fn(kind):
     name = type(kind).__name__
 
-    def program(states, *query_args):
-        TRACE_COUNT[name] += 1
-        merged = federated.merge_reduce(kind, states)
-        one = jax.tree.map(lambda x: x[None], merged)
-        return batched.stacked_estimate(
-            kind, one, jnp.zeros((1,), jnp.int32), *query_args)
+    def build():
+        def program(states, *query_args):
+            TRACE_COUNT[name] += 1
+            merged = federated.merge_reduce(kind, states)
+            one = jax.tree.map(lambda x: x[None], merged)
+            return batched.stacked_estimate(
+                kind, one, jnp.zeros((1,), jnp.int32), *query_args)
 
-    return jax.jit(program)
+        return jax.jit(program)
+
+    return _ESTIMATE_MERGED.get((kind,), build)
 
 
 def estimate_merged(kind, states_stacked, *query_args):
@@ -186,26 +294,29 @@ def estimate_merged(kind, states_stacked, *query_args):
     return _estimate_merged_fn(kind)(states_stacked, *query_args)
 
 
-@functools.lru_cache(maxsize=None)
 def _estimate_collective_fn(kind, mesh, axis_name):
     name = type(kind).__name__
 
-    def program(states, *query_args):
-        TRACE_COUNT[name] += 1
+    def build():
+        def program(states, *query_args):
+            TRACE_COUNT[name] += 1
 
-        def shard_fn(shard, *qargs):
-            local = jax.tree.map(lambda x: jnp.squeeze(x, 0), shard)
-            merged = federated.merge_over_axis(kind, local, axis_name)
-            one = jax.tree.map(lambda x: x[None], merged)
-            return batched.stacked_estimate(
-                kind, one, jnp.zeros((1,), jnp.int32), *qargs)
+            def shard_fn(shard, *qargs):
+                local = jax.tree.map(lambda x: jnp.squeeze(x, 0), shard)
+                merged = federated.merge_over_axis(kind, local, axis_name)
+                one = jax.tree.map(lambda x: x[None], merged)
+                return batched.stacked_estimate(
+                    kind, one, jnp.zeros((1,), jnp.int32), *qargs)
 
-        fn = _shard_map(shard_fn, mesh=mesh,
-                        in_specs=(P(axis_name),) + (P(),) * len(query_args),
-                        out_specs=P(), check_vma=False)
-        return fn(states, *query_args)
+            fn = _shard_map(shard_fn, mesh=mesh,
+                            in_specs=(P(axis_name),) + (P(),) * len(
+                                query_args),
+                            out_specs=P(), check_vma=False)
+            return fn(states, *query_args)
 
-    return jax.jit(program)
+        return jax.jit(program)
+
+    return _ESTIMATE_COLLECTIVE.get((kind, mesh, axis_name), build)
 
 
 def estimate_collective(kind, states_stacked, *query_args, mesh, axis_name):
@@ -222,6 +333,15 @@ def estimate_collective(kind, states_stacked, *query_args, mesh, axis_name):
     DISPATCH_COUNT[type(kind).__name__] += 1
     return _estimate_collective_fn(kind, mesh, axis_name)(
         states_stacked, *query_args)
+
+
+# ---------------------------------------------------------------------------
+# blue path: per-kind update wrappers. Every wrapper takes EITHER routed
+# rows (``syn_idx``, -1 = drop) or a ``route`` tuple
+# ``(keys_lo, keys_hi, table_rows, sid_lo, sid_hi, n_probe)`` — the second
+# form fuses the routing probe into the Pallas grid so state + table are
+# read in ONE HBM pass per batch.
+# ---------------------------------------------------------------------------
 
 
 def countmin_update(counts: jax.Array, syn_idx: jax.Array, items: jax.Array,
@@ -267,13 +387,13 @@ def ams_update(counts: jax.Array, syn_idx: jax.Array, items: jax.Array,
     return out
 
 
-def _scatter_call(counts, syn_idx, idx, values, signs):
+def _scatter_call(counts, syn_idx, idx, values, signs, *, route=None):
     n, d, w = counts.shape
     t_tile = 512
     s_tile = min(128, n) if n % min(128, n) == 0 else n
     w_tile = min(256, w)
-    # pad T; padded rows get syn_idx = -1 -> match nothing
-    syn_idx = _pad_to(syn_idx.astype(jnp.int32), t_tile, value=-1)
+    # pad T; padded rows get syn_idx = -1 / an unroutable sid -> match
+    # nothing (values are also padded to 0)
     idx = _pad_to(idx.astype(jnp.int32), t_tile, value=-1)
     values = _pad_to(values.astype(jnp.float32), t_tile)
     signs = _pad_to(signs.astype(jnp.float32), t_tile)
@@ -281,9 +401,18 @@ def _scatter_call(counts, syn_idx, idx, values, signs):
     n_pad = (-n) % s_tile
     w_pad = (-w) % w_tile
     padded = jnp.pad(counts, ((0, n_pad), (0, 0), (0, w_pad)))
-    out = onehot_matmul.onehot_scatter_add(
-        padded, syn_idx, idx, values, signs, s_tile=s_tile, w_tile=w_tile,
-        t_tile=t_tile, interpret=_interpret())
+    if route is None:
+        syn_idx = _pad_to(syn_idx.astype(jnp.int32), t_tile, value=-1)
+        out = onehot_matmul.onehot_scatter_add(
+            padded, syn_idx, idx, values, signs, s_tile=s_tile,
+            w_tile=w_tile, t_tile=t_tile, interpret=_interpret())
+    else:
+        klo, khi, trows, slo, shi, n_probe = route
+        slo, shi = _pad_sids(slo, shi, t_tile)
+        out = onehot_matmul.onehot_probe_scatter(
+            padded, klo, khi, trows, slo, shi, idx, values, signs,
+            n_probe=n_probe, s_tile=s_tile, w_tile=w_tile, t_tile=t_tile,
+            interpret=_interpret())
     return out[:n, :, :w]
 
 
@@ -294,34 +423,343 @@ def hll_update(regs: jax.Array, syn_idx: jax.Array, items: jax.Array,
     """Pallas-backed stacked HLL update. regs [n, m]. Data-source rows
     (``source_rows``) take an elementwise max with a fresh single-HLL of
     the batch — merge = max, fused into the same dispatch."""
-    n, m = regs.shape
+    bucket, raw_rank = _hll_prep(items, seed, p)
+    rank = jnp.where(mask, raw_rank, 0).astype(jnp.int32)
+    out = _hll_call(regs, syn_idx, bucket, rank)
+    if source_rows is not None:
+        tm = mask if source_tuple_mask is None else source_tuple_mask
+        src_rank = jnp.where(tm, raw_rank, 0).astype(jnp.int32)
+        fresh = jnp.zeros((regs.shape[1],), jnp.int32).at[bucket].max(
+            src_rank)
+        out = out.at[source_rows].max(fresh[None, :])
+    return out
+
+
+def _hll_prep(items, seed: int, p: int):
     h = hashing.hash_u32(items, seed)
     bucket = (h >> np.uint32(32 - p)).astype(jnp.int32)
     rest = (h << np.uint32(p)).astype(jnp.uint32)
     raw_rank = jnp.where(rest == 0, 32 - p + 1, hashing.clz32(rest) + 1)
-    rank = jnp.where(mask, raw_rank, 0).astype(jnp.int32)
-    src_fresh = None
-    if source_rows is not None:
-        tm = mask if source_tuple_mask is None else source_tuple_mask
-        src_rank = jnp.where(tm, raw_rank, 0).astype(jnp.int32)
-        src_fresh = jnp.zeros((m,), jnp.int32).at[bucket].max(src_rank)
+    return bucket, raw_rank
 
+
+def _hll_call(regs, syn_idx, bucket, rank, *, route=None):
+    n, m = regs.shape
     t_tile = 128
     s_tile = min(8, n)
     m_tile = min(128, m)
-    syn_idx = _pad_to(syn_idx.astype(jnp.int32), t_tile)
-    bucket = _pad_to(bucket, t_tile)
-    rank = _pad_to(rank, t_tile)          # pad rank 0 => no-op
+    bucket = _pad_to(bucket.astype(jnp.int32), t_tile)
+    rank = _pad_to(rank.astype(jnp.int32), t_tile)   # pad rank 0 => no-op
     n_pad = (-n) % s_tile
     m_pad = (-m) % m_tile
     padded = jnp.pad(regs, ((0, n_pad), (0, m_pad)))
-    out = hll_max.hll_max_update(padded, syn_idx, bucket, rank,
-                                 s_tile=s_tile, m_tile=m_tile, t_tile=t_tile,
-                                 interpret=_interpret())
-    out = out[:n, :m]
-    if src_fresh is not None:
-        out = out.at[source_rows].max(src_fresh[None, :])
+    if route is None:
+        syn_idx = _pad_to(syn_idx.astype(jnp.int32), t_tile, value=-1)
+        out = hll_max.hll_max_update(
+            padded, syn_idx, bucket, rank, s_tile=s_tile, m_tile=m_tile,
+            t_tile=t_tile, interpret=_interpret())
+    else:
+        klo, khi, trows, slo, shi, n_probe = route
+        slo, shi = _pad_sids(slo, shi, t_tile)
+        out = hll_max.hll_probe_max_update(
+            padded, klo, khi, trows, slo, shi, bucket, rank,
+            n_probe=n_probe, s_tile=s_tile, m_tile=m_tile, t_tile=t_tile,
+            interpret=_interpret())
+    return out[:n, :m]
+
+
+def bloom_update(bits: jax.Array, syn_idx: jax.Array, items: jax.Array,
+                 mask: jax.Array, *, seeds: jax.Array, log2_bits: int,
+                 source_rows: jax.Array | None = None,
+                 source_tuple_mask: jax.Array | None = None) -> jax.Array:
+    """Pallas-backed stacked Bloom update. bits [n, m] int32 0/1; each
+    tuple ORs its k hash positions into its routed row. Data-source rows
+    take the OR (== max) of a fresh single-filter of the batch."""
+    idx = hashing.bucket_hash(items, seeds, log2_bits)          # [T, k]
+    upd = mask.astype(jnp.int32)
+    out = _bitset_call(bits, syn_idx, idx, upd)
+    if source_rows is not None:
+        tm = mask if source_tuple_mask is None else source_tuple_mask
+        out = out.at[source_rows].max(
+            _bloom_fresh(bits.shape[1], idx, tm)[None])
     return out
+
+
+def _bloom_fresh(m: int, idx, tuple_mask):
+    u = jnp.broadcast_to(tuple_mask.astype(jnp.int32)[:, None], idx.shape)
+    return jnp.zeros((m,), jnp.int32).at[idx].max(u)
+
+
+def _bitset_call(bits, syn_idx, idx, upd, *, route=None):
+    n, m = bits.shape
+    t_tile = 128
+    s_tile = min(8, n)
+    m_tile = min(128, m)
+    idx = _pad_to(idx.astype(jnp.int32), t_tile, value=-1)
+    upd = _pad_to(upd.astype(jnp.int32), t_tile)     # pad upd 0 => no-op
+    n_pad = (-n) % s_tile
+    m_pad = (-m) % m_tile
+    padded = jnp.pad(bits, ((0, n_pad), (0, m_pad)))
+    if route is None:
+        syn_idx = _pad_to(syn_idx.astype(jnp.int32), t_tile, value=-1)
+        out = bitset_or.bitset_max_update(
+            padded, syn_idx, idx, upd, s_tile=s_tile, m_tile=m_tile,
+            t_tile=t_tile, interpret=_interpret())
+    else:
+        klo, khi, trows, slo, shi, n_probe = route
+        slo, shi = _pad_sids(slo, shi, t_tile)
+        out = bitset_or.bitset_probe_max_update(
+            padded, klo, khi, trows, slo, shi, idx, upd, n_probe=n_probe,
+            s_tile=s_tile, m_tile=m_tile, t_tile=t_tile,
+            interpret=_interpret())
+    return out[:n, :m]
+
+
+def fm_update(state: jax.Array, syn_idx: jax.Array, which: jax.Array,
+              pos: jax.Array, mask: jax.Array, *,
+              source_rows: jax.Array | None = None,
+              source_tuple_mask: jax.Array | None = None) -> jax.Array:
+    """Pallas-backed stacked FM/PCSA update. state [n, maps, bits] int32
+    0/1; each tuple sets bit (which, pos) of its routed row. The caller
+    provides (which, pos) from the kind's hash split (``FMSketch
+    ._which_pos``)."""
+    upd = mask.astype(jnp.int32)
+    out = _fm_call(state, syn_idx, which, pos, upd)
+    if source_rows is not None:
+        tm = mask if source_tuple_mask is None else source_tuple_mask
+        fresh = jnp.zeros(state.shape[1:], jnp.int32).at[which, pos].max(
+            tm.astype(jnp.int32))
+        out = out.at[source_rows].max(fresh[None])
+    return out
+
+
+def _fm_call(state, syn_idx, which, pos, upd, *, route=None):
+    n = state.shape[0]
+    q = state.shape[1] * state.shape[2]
+    t_tile = 128
+    s_tile = min(8, n)
+    m_tile = min(128, q)
+    which = _pad_to(which.astype(jnp.int32), t_tile)
+    pos = _pad_to(pos.astype(jnp.int32), t_tile)
+    upd = _pad_to(upd.astype(jnp.int32), t_tile)     # pad upd 0 => no-op
+    n_pad = (-n) % s_tile
+    padded = jnp.pad(state, ((0, n_pad), (0, 0), (0, 0)))
+    if route is None:
+        syn_idx = _pad_to(syn_idx.astype(jnp.int32), t_tile, value=-1)
+        out = fm_bitmap.fm_bit_update(
+            padded, syn_idx, which, pos, upd, s_tile=s_tile, m_tile=m_tile,
+            t_tile=t_tile, interpret=_interpret())
+    else:
+        klo, khi, trows, slo, shi, n_probe = route
+        slo, shi = _pad_sids(slo, shi, t_tile)
+        out = fm_bitmap.fm_probe_bit_update(
+            padded, klo, khi, trows, slo, shi, which, pos, upd,
+            n_probe=n_probe, s_tile=s_tile, m_tile=m_tile, t_tile=t_tile,
+            interpret=_interpret())
+    return out[:n]
+
+
+def rhp_update(state: jax.Array, syn_idx: jax.Array, items: jax.Array,
+               values: jax.Array, mask: jax.Array, *, seeds: jax.Array,
+               source_rows: jax.Array | None = None,
+               source_tuple_mask: jax.Array | None = None) -> jax.Array:
+    """Pallas-backed stacked RHP/SimHash update. state [n, b] f32; each
+    tuple adds ``v * sign_row`` into its routed row (dense — a matmul).
+    Data-source rows add the batch's summed projection (linear merge)."""
+    sgn = hashing.sign_hash(items, seeds)                       # [T, b]
+    v = values * mask.astype(jnp.float32)
+    out = _rhp_call(state, syn_idx, v, sgn)
+    if source_rows is not None:
+        tm = mask if source_tuple_mask is None else source_tuple_mask
+        vs = (values * tm.astype(jnp.float32))[:, None]
+        out = out.at[source_rows].add(jnp.sum(sgn * vs, axis=0)[None])
+    return out
+
+
+def _rhp_call(state, syn_idx, values, signs, *, route=None):
+    n, b = state.shape
+    t_tile = 512
+    s_tile = min(128, n) if n % min(128, n) == 0 else n
+    b_tile = min(128, b)
+    values = _pad_to(values.astype(jnp.float32), t_tile)
+    signs = _pad_to(signs.astype(jnp.float32), t_tile)
+    n_pad = (-n) % s_tile
+    b_pad = (-b) % b_tile
+    padded = jnp.pad(state, ((0, n_pad), (0, b_pad)))
+    if b_pad:
+        signs = jnp.pad(signs, ((0, 0), (0, b_pad)))
+    if route is None:
+        syn_idx = _pad_to(syn_idx.astype(jnp.int32), t_tile, value=-1)
+        out = rhp_project.rhp_project_update(
+            padded, syn_idx, values, signs, s_tile=s_tile, b_tile=b_tile,
+            t_tile=t_tile, interpret=_interpret())
+    else:
+        klo, khi, trows, slo, shi, n_probe = route
+        slo, shi = _pad_sids(slo, shi, t_tile)
+        out = rhp_project.rhp_probe_update(
+            padded, klo, khi, trows, slo, shi, values, signs,
+            n_probe=n_probe, s_tile=s_tile, b_tile=b_tile, t_tile=t_tile,
+            interpret=_interpret())
+    return out[:n, :b]
+
+
+# ---------------------------------------------------------------------------
+# the update-kernel registry. A kind opts into the Pallas blue path by
+# declaring ``update_kernel = "<name>"``; the engine resolves the name here
+# at dispatch time — no isinstance ladder anywhere. Every registered
+# builder returns an update fn with the SAME signature:
+#
+#     fn(state, keys_lo, keys_hi, table_rows, sid_lo, sid_hi,
+#        items, values, mask, source_rows, *, n_probe) -> state'
+#
+# where ``source_rows`` may be None and ``n_probe`` is static. When built
+# with ``fuse_probe=True`` the routing probe runs INSIDE the Pallas grid
+# (one HBM pass over state + table per batch); with False it runs as the
+# jnp ``route_probe`` ahead of the plain scatter kernel (two logical
+# passes, same results — the equivalence tests flip ``SDE_FUSED_PROBE``).
+# The per-batch source fold stays outside the kernel either way: it is
+# O(source rows), not O(capacity), and fuses into the same dispatch.
+# ---------------------------------------------------------------------------
+
+UPDATE_KERNELS: Dict[str, Callable] = {}
+
+
+def register_update_kernel(name: str, builder: Callable, *,
+                           overwrite: bool = False) -> None:
+    """Register ``builder(kind, fuse_probe) -> update_fn`` under ``name``.
+    Kinds reference kernels by name (``update_kernel = name``), so plugged
+    kinds can reuse a stock kernel or bring their own without the engine
+    learning any new types."""
+    if name in UPDATE_KERNELS and not overwrite:
+        raise ValueError(f"update kernel {name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    UPDATE_KERNELS[name] = builder
+
+
+def resolve_update_kernel(kind, fuse_probe: bool | None = None):
+    """The registry lookup the engine dispatches through: returns the
+    kind's built update fn, or None when the kind declares no
+    ``update_kernel`` (engine falls back to ``batched.stacked_update``).
+    ``fuse_probe`` defaults to :func:`probe_fusion_enabled`."""
+    name = getattr(kind, "update_kernel", None)
+    if name is None:
+        return None
+    builder = UPDATE_KERNELS.get(name)
+    if builder is None:
+        raise KeyError(
+            f"{type(kind).__name__} declares update_kernel={name!r} but no "
+            f"such kernel is registered — register_update_kernel({name!r}, "
+            "builder) first, or drop the declaration to use the XLA "
+            "fallback")
+    if fuse_probe is None:
+        fuse_probe = probe_fusion_enabled()
+    return builder(kind, fuse_probe)
+
+
+def _route_or_rows(fuse, klo, khi, trows, slo, shi, n_probe):
+    """(route tuple, None) when fusing; (None, routed rows) when not."""
+    if fuse:
+        return (klo, khi, trows, slo, shi, n_probe), None
+    return None, route_probe(klo, khi, trows, slo, shi, n_probe=n_probe)
+
+
+def _countmin_kernel(kind, fuse):
+    def fn(state, klo, khi, trows, slo, shi, items, vals, msk, src_rows, *,
+           n_probe):
+        seeds = kind._seeds()
+        idx = hashing.bucket_hash(items, seeds, kind.log2_width)
+        v = vals if kind.weighted else jnp.ones_like(vals)
+        vm = v * msk.astype(jnp.float32)
+        signs = jnp.ones((items.shape[0], kind.depth), jnp.float32)
+        route, syn = _route_or_rows(fuse, klo, khi, trows, slo, shi, n_probe)
+        out = _scatter_call(state, syn, idx, vm, signs, route=route)
+        if src_rows is not None:
+            out = _source_fold(out, idx,
+                               jnp.broadcast_to(vm[:, None], idx.shape),
+                               src_rows)
+        return out
+    return fn
+
+
+def _ams_kernel(kind, fuse):
+    def fn(state, klo, khi, trows, slo, shi, items, vals, msk, src_rows, *,
+           n_probe):
+        seeds = kind._seeds()
+        idx = hashing.bucket_hash(items, seeds, kind.log2_width)
+        sgn = hashing.sign_hash(items, seeds)
+        v = vals * msk.astype(jnp.float32)
+        route, syn = _route_or_rows(fuse, klo, khi, trows, slo, shi, n_probe)
+        out = _scatter_call(state, syn, idx, v, sgn, route=route)
+        if src_rows is not None:
+            out = _source_fold(out, idx, v[:, None] * sgn, src_rows)
+        return out
+    return fn
+
+
+def _hll_kernel(kind, fuse):
+    def fn(state, klo, khi, trows, slo, shi, items, vals, msk, src_rows, *,
+           n_probe):
+        bucket, raw_rank = _hll_prep(items, kind.seed, kind.p)
+        rank = jnp.where(msk, raw_rank, 0).astype(jnp.int32)
+        route, syn = _route_or_rows(fuse, klo, khi, trows, slo, shi, n_probe)
+        out = _hll_call(state, syn, bucket, rank, route=route)
+        if src_rows is not None:
+            fresh = jnp.zeros((state.shape[1],), jnp.int32).at[bucket].max(
+                rank)
+            out = out.at[src_rows].max(fresh[None, :])
+        return out
+    return fn
+
+
+def _bloom_kernel(kind, fuse):
+    def fn(state, klo, khi, trows, slo, shi, items, vals, msk, src_rows, *,
+           n_probe):
+        idx = hashing.bucket_hash(items, kind._seeds(), kind.log2_bits)
+        upd = msk.astype(jnp.int32)
+        route, syn = _route_or_rows(fuse, klo, khi, trows, slo, shi, n_probe)
+        out = _bitset_call(state, syn, idx, upd, route=route)
+        if src_rows is not None:
+            out = out.at[src_rows].max(
+                _bloom_fresh(state.shape[1], idx, msk)[None])
+        return out
+    return fn
+
+
+def _fm_kernel(kind, fuse):
+    def fn(state, klo, khi, trows, slo, shi, items, vals, msk, src_rows, *,
+           n_probe):
+        which, pos = kind._which_pos(items)
+        upd = msk.astype(jnp.int32)
+        route, syn = _route_or_rows(fuse, klo, khi, trows, slo, shi, n_probe)
+        out = _fm_call(state, syn, which, pos, upd, route=route)
+        if src_rows is not None:
+            fresh = jnp.zeros(state.shape[1:], jnp.int32).at[
+                which, pos].max(upd)
+            out = out.at[src_rows].max(fresh[None])
+        return out
+    return fn
+
+
+def _rhp_kernel(kind, fuse):
+    def fn(state, klo, khi, trows, slo, shi, items, vals, msk, src_rows, *,
+           n_probe):
+        sgn = hashing.sign_hash(items, kind._seeds())
+        v = vals * msk.astype(jnp.float32)
+        route, syn = _route_or_rows(fuse, klo, khi, trows, slo, shi, n_probe)
+        out = _rhp_call(state, syn, v, sgn, route=route)
+        if src_rows is not None:
+            out = out.at[src_rows].add(
+                jnp.sum(sgn * v[:, None], axis=0)[None])
+        return out
+    return fn
+
+
+register_update_kernel("countmin_scatter", _countmin_kernel)
+register_update_kernel("ams_scatter", _ams_kernel)
+register_update_kernel("hll_max", _hll_kernel)
+register_update_kernel("bloom_bitset", _bloom_kernel)
+register_update_kernel("fm_bitmap", _fm_kernel)
+register_update_kernel("rhp_project", _rhp_kernel)
 
 
 def dft_step(re: jax.Array, im: jax.Array, delta: jax.Array,

@@ -1,0 +1,70 @@
+"""The hashed-routing linear probe, as pure vector math.
+
+One implementation serves BOTH halves of the blue path:
+
+  * the XLA path: ``kernels.ops.route_probe`` calls :func:`probe_rows` on
+    plain device arrays before handing rows to ``batched.stacked_update``
+    (probe-then-scatter — two passes over the batch);
+  * the Pallas path: the fused update kernels call :func:`probe_rows` on
+    VALUES LOADED INSIDE the kernel body (the routing-table mirror rides
+    into VMEM as a whole-array block) and cache the result in a VMEM
+    scratch shared across the sequential grid — probe once per batch,
+    scatter in the same kernel, ONE HBM pass.
+
+Everything here is shape-polymorphic jnp on uint32/int32 lanes — legal
+both under jit and inside a Pallas kernel (gathers + ``fori_loop`` lower
+fine in interpret and Mosaic). The slot hash must stay in lockstep with
+``service.routing.slot_hash`` (the host-side insert path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+
+# numpy scalars, NOT jnp arrays: a pre-existing device array captured by a
+# Pallas kernel body is rejected ("captures constants"); numpy scalars are
+# inlined into the kernel jaxpr as literals.
+ROUTE_GOLDEN = np.uint32(0x9E3779B9)
+ROUTE_EMPTY_HI = np.uint32(0xFFFFFFFF)    # hi half of an empty slot; valid
+                                          # ids < 2**63 have hi <= 2**31-1
+
+
+def slot0(sid_lo: jax.Array, sid_hi: jax.Array, size: int) -> jax.Array:
+    """Initial probe slot per stream id (uint32 halves), table size pow2."""
+    h = hashing.mix32(sid_lo ^ hashing.mix32(sid_hi ^ ROUTE_GOLDEN))
+    return (h & jnp.uint32(size - 1)).astype(jnp.int32)
+
+
+def probe_rows(keys_lo: jax.Array, keys_hi: jax.Array, rows: jax.Array,
+               sid_lo: jax.Array, sid_hi: jax.Array, *,
+               n_probe: int) -> jax.Array:
+    """Rows for a batch of stream ids via linear probing: ``-1`` for
+    unrouted ids. Keys are stored as uint32 (lo, hi) halves so the probe
+    needs no 64-bit lanes; ``n_probe`` is the static trip count (the
+    table's longest insert displacement, pow2-rounded by the engine so
+    retraces stay bounded). The probe is a ``fori_loop`` gather chain —
+    plain jnp, fusable into the caller's single blue-path dispatch or
+    traceable inside a Pallas kernel body.
+    """
+    size_mask = jnp.int32(keys_lo.shape[0] - 1)
+    sid_lo = sid_lo.astype(jnp.uint32)
+    sid_hi = sid_hi.astype(jnp.uint32)
+    slot = slot0(sid_lo, sid_hi, keys_lo.shape[0])
+
+    def body(_, carry):
+        row, slot, done = carry
+        k_hi = keys_hi[slot]
+        hit = (keys_lo[slot] == sid_lo) & (k_hi == sid_hi)
+        empty = k_hi == ROUTE_EMPTY_HI
+        row = jnp.where(hit & ~done, rows[slot], row)
+        done = done | hit | empty
+        slot = jnp.where(done, slot, (slot + 1) & size_mask)
+        return row, slot, done
+
+    row0 = jnp.full(sid_lo.shape, -1, jnp.int32)
+    done0 = jnp.zeros(sid_lo.shape, bool)
+    row, _, _ = jax.lax.fori_loop(0, n_probe, body, (row0, slot, done0))
+    return row

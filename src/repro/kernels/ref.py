@@ -18,6 +18,30 @@ def hll_max_update(regs, syn_idx, bucket, rank):
     return regs.at[syn_idx, bucket].max(rank)
 
 
+def bitset_max_update(bits, syn_idx, idx, upd):
+    """bits [n, m] k-position OR oracle: idx [T, k], upd [T] 0/1 (upd 0
+    and syn_idx -1 entries are no-ops — -1 rows are dropped, not
+    wrapped)."""
+    keep = (syn_idx >= 0) & (upd > 0)
+    u = jnp.where(keep, upd, 0)[:, None]
+    rows = jnp.maximum(syn_idx, 0)
+    return bits.at[rows[:, None], idx].max(jnp.broadcast_to(u, idx.shape))
+
+
+def fm_bit_update(state, syn_idx, which, pos, upd):
+    """state [n, maps, bits] single-bit OR oracle (same -1/0 no-ops)."""
+    keep = (syn_idx >= 0) & (upd > 0)
+    u = jnp.where(keep, upd, 0)
+    return state.at[jnp.maximum(syn_idx, 0), which, pos].max(u)
+
+
+def rhp_project_update(state, syn_idx, values, signs):
+    """state [n, b] routed sign-row add oracle: values [T] (mask folded),
+    signs [T, b]; syn_idx -1 entries are dropped."""
+    v = jnp.where(syn_idx >= 0, values, 0.0)
+    return state.at[jnp.maximum(syn_idx, 0)].add(v[:, None] * signs)
+
+
 def sliding_dft_step(re, im, delta, mask, tw_re, tw_im):
     re2 = re + delta[:, None]
     new_re = re2 * tw_re[None, :] - im * tw_im[None, :]

@@ -222,9 +222,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     shape = SHAPES[shape_name]
     skip = runnable(cfg, shape)
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    # every record shape (ok/skip/error) carries the normalized
+    # ``mesh_name`` — roofline.py filters on it, and the legacy skip/error
+    # records that stuffed the name into ``mesh`` broke that filter
     if skip:
         return dict(arch=arch, shape=shape_name, mesh=mesh_name,
-                    skipped=skip)
+                    mesh_name=mesh_name, skipped=skip)
     try:
         lowered, cfg, shape, mesh = lower_cell(arch, shape_name, multi_pod,
                                                grad_accum=grad_accum)
@@ -233,6 +236,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         return rec
     except Exception:
         return dict(arch=arch, shape=shape_name, mesh=mesh_name,
+                    mesh_name=mesh_name,
                     error=traceback.format_exc()[-4000:])
 
 

@@ -238,13 +238,19 @@ class SDE:
     single-device operation.
     """
 
-    def __init__(self, site: str = "site-0", backend: str = "xla",
+    def __init__(self, site: str = "site-0",
+                 backend: Optional[str] = None,
                  mesh: Optional[Mesh] = None,
                  rules: Optional[specs.MeshRules] = None,
                  pipelined: Optional[bool] = None, pipeline_depth: int = 2,
                  continuous_out_cap: Optional[int] = 65536,
                  device=None):
         self.site = site
+        # backend=None defers to the SDE_BACKEND env toggle (default
+        # "xla"), so whole suites flip to the Pallas registry kernels
+        # untouched — the same pattern as SDE_PIPELINED below
+        if backend is None:
+            backend = os.environ.get("SDE_BACKEND", "") or "xla"
         self.backend = backend
         self.mesh = mesh
         if device is not None and mesh is not None:
@@ -385,6 +391,14 @@ class SDE:
             freed.setdefault(e.kind_key, []).append(e.row)
         for kind, rows in freed.items():
             self.stacks[kind].free_rows(rows)
+            # a kind nothing references anymore releases BOTH its stack
+            # state and its compiled programs (the KindCaches are bounded
+            # by engine lifecycle, not append-only). Kind instances are
+            # value-equal across engines, so another engine still serving
+            # the same parameters merely re-jits on its next batch.
+            if not any(e.kind_key == kind for e in self.entries.values()):
+                del self.stacks[kind]
+                kops.evict_kind_caches(kind)
         self._cq_groups = None
         return api.Response(request_id=req.request_id,
                             synopsis_id=req.synopsis_id, value=len(ids))
@@ -571,6 +585,18 @@ class SDE:
         if self._pipeline is None:
             return 0
         return self._pipeline.flush()
+
+    def close(self) -> None:
+        """Retire the engine: drain the pipeline, then release every kind
+        stack and this engine's share of the compiled-program caches
+        (update/step/estimate entries keyed by its kinds). Idempotent;
+        the engine stays usable — a later build simply re-allocates."""
+        self.flush()
+        for kind in list(self.stacks):
+            kops.evict_kind_caches(kind)
+        self.stacks.clear()
+        self.entries.clear()
+        self._cq_groups = None
 
     @property
     def pending_batches(self) -> int:
@@ -862,83 +888,90 @@ def _json_params(params):
 
 
 # ---------------------------------------------------------------------------
-# jitted update/estimate dispatch (cached per (kind, backend, sharding,
-# has_sources, n_probe, shapes)). The cached program is the WHOLE blue path
-# for one kind: hashed routing probe, routed update and data-source update
-# fused into one dispatch; the state buffer is donated (in-place on device),
-# and — on a mesh — pinned to the stack's `synopsis`-axis sharding while the
-# routing-table mirror stays replicated.
+# jitted update/step dispatch, cached per (kind, backend, sharding,
+# has_sources, n_probe, fuse_probe). The cached program is the WHOLE blue
+# path for one kind: hashed routing probe, routed update and data-source
+# update fused into one dispatch; the state buffer is donated (in-place on
+# device), and — on a mesh — pinned to the stack's `synopsis`-axis sharding
+# while the routing-table mirror stays replicated.
+#
+# Kernel choice is the REGISTRY's, not the engine's: under
+# ``backend="pallas"`` the kind's declared ``update_kernel`` resolves to a
+# fused probe+scatter Pallas program (one HBM pass per batch when
+# ``SDE_FUSED_PROBE`` is on); kinds without a declaration — and the
+# ``backend="xla"`` path — run probe-then-``batched.stacked_update``. The
+# caches are bounded KindCaches: engines evict their kinds' entries on
+# stop/close (``kops.KERNEL_CACHE_SIZE`` gauges them).
 # ---------------------------------------------------------------------------
-import functools
+
+_UPDATE_CACHE = kops.KindCache("update")
+_STEP_CACHE = kops.KindCache("step")
 
 
-@functools.lru_cache(maxsize=None)
 def _update_fn(kind, backend: str, sharding, has_sources: bool,
-               n_probe: int):
-    def fused(state, klo, khi, trows, sid_lo, sid_hi, items, vals, msk,
-              *src):
-        src_rows = src[0] if has_sources else None
-        syn_idx = kops.route_probe(klo, khi, trows, sid_lo, sid_hi,
-                                   n_probe=n_probe)   # [-1 => unrouted]
-        routed = msk & (syn_idx >= 0)
-        rows = jnp.maximum(syn_idx, 0)
-        if backend == "pallas":
-            from repro.kernels import ops as kops_
-            if isinstance(kind, core.CountMin):
-                return kops_.countmin_update(
-                    state, rows, items, vals, routed, seeds=kind._seeds(),
-                    log2_width=kind.log2_width, weighted=kind.weighted,
-                    source_rows=src_rows, source_tuple_mask=msk)
-            if isinstance(kind, core.AMS):
-                return kops_.ams_update(
-                    state, rows, items, vals, routed, seeds=kind._seeds(),
-                    log2_width=kind.log2_width,
-                    source_rows=src_rows, source_tuple_mask=msk)
-            if isinstance(kind, core.HyperLogLog):
-                return kops_.hll_update(
-                    state, rows, items, routed, seed=kind.seed, p=kind.p,
-                    source_rows=src_rows, source_tuple_mask=msk)
-            # no kernel for this kind: fall through to XLA path
-        return batched.stacked_update(kind, state, syn_idx, items, vals,
-                                      msk, src_rows)
+               n_probe: int, fuse_probe: bool):
+    def build():
+        name = f"update:{type(kind).__name__}"
+        kernel = (kops.resolve_update_kernel(kind, fuse_probe)
+                  if backend == "pallas" else None)
 
-    kw = dict(donate_argnums=0)
-    if sharding is not None:
-        kw["out_shardings"] = sharding
-    return jax.jit(fused, **kw)
+        def fused(state, klo, khi, trows, sid_lo, sid_hi, items, vals, msk,
+                  *src):
+            kops.TRACE_COUNT[name] += 1     # runs only when jit (re)traces
+            src_rows = src[0] if has_sources else None
+            if kernel is not None:
+                return kernel(state, klo, khi, trows, sid_lo, sid_hi,
+                              items, vals, msk, src_rows, n_probe=n_probe)
+            syn_idx = kops.route_probe(klo, khi, trows, sid_lo, sid_hi,
+                                       n_probe=n_probe)   # [-1 => unrouted]
+            return batched.stacked_update(kind, state, syn_idx, items,
+                                          vals, msk, src_rows)
+
+        kw = dict(donate_argnums=0)
+        if sharding is not None:
+            kw["out_shardings"] = sharding
+        return jax.jit(fused, **kw)
+
+    return _UPDATE_CACHE.get(
+        (kind, backend, sharding, has_sources, n_probe, fuse_probe), build)
 
 
 def _update(kind, backend, sharding, n_probe, state, klo, khi, trows,
             sid_lo, sid_hi, items, vals, msk, src_rows=None):
-    fn = _update_fn(kind, backend, sharding, src_rows is not None, n_probe)
+    kops.DISPATCH_COUNT[f"update:{type(kind).__name__}"] += 1
+    fn = _update_fn(kind, backend, sharding, src_rows is not None, n_probe,
+                    kops.probe_fusion_enabled())
     if src_rows is None:
         return fn(state, klo, khi, trows, sid_lo, sid_hi, items, vals, msk)
     return fn(state, klo, khi, trows, sid_lo, sid_hi, items, vals, msk,
               src_rows)
 
 
-@functools.lru_cache(maxsize=None)
 def _step_fn(kind, sharding, n_probe: int):
-    def fused(state, klo, khi, trows, sid_lo, sid_hi, vals, msk):
-        capacity = jax.tree.leaves(state)[0].shape[0]
-        syn_idx = kops.route_probe(klo, khi, trows, sid_lo, sid_hi,
-                                   n_probe=n_probe)
-        routed = msk & (syn_idx >= 0)
-        rows = jnp.where(routed, syn_idx, capacity)    # overflow slot
-        # LAST routed tuple per row wins, deterministically: scatter-max
-        # the tuple order, then gather each winner's value (.at[].set with
-        # duplicate indices applies in implementation-defined order)
-        order = jnp.arange(sid_lo.shape[0], dtype=jnp.int32)
-        winner = jnp.full((capacity + 1,), -1, jnp.int32)
-        winner = winner.at[rows].max(jnp.where(routed, order, -1))[:-1]
-        hit = winner >= 0
-        per_row = jnp.where(hit, vals[jnp.maximum(winner, 0)], 0.0)
-        return batched.stacked_step(kind, state, per_row, hit)
+    def build():
+        def fused(state, klo, khi, trows, sid_lo, sid_hi, vals, msk):
+            capacity = jax.tree.leaves(state)[0].shape[0]
+            syn_idx = kops.route_probe(klo, khi, trows, sid_lo, sid_hi,
+                                       n_probe=n_probe)
+            routed = msk & (syn_idx >= 0)
+            rows = jnp.where(routed, syn_idx, capacity)    # overflow slot
+            # LAST routed tuple per row wins, deterministically:
+            # scatter-max the tuple order, then gather each winner's value
+            # (.at[].set with duplicate indices applies in
+            # implementation-defined order)
+            order = jnp.arange(sid_lo.shape[0], dtype=jnp.int32)
+            winner = jnp.full((capacity + 1,), -1, jnp.int32)
+            winner = winner.at[rows].max(jnp.where(routed, order, -1))[:-1]
+            hit = winner >= 0
+            per_row = jnp.where(hit, vals[jnp.maximum(winner, 0)], 0.0)
+            return batched.stacked_step(kind, state, per_row, hit)
 
-    kw = dict(donate_argnums=0)
-    if sharding is not None:
-        kw["out_shardings"] = sharding
-    return jax.jit(fused, **kw)
+        kw = dict(donate_argnums=0)
+        if sharding is not None:
+            kw["out_shardings"] = sharding
+        return jax.jit(fused, **kw)
+
+    return _STEP_CACHE.get((kind, sharding, n_probe), build)
 
 
 def _step_all(kind, sharding, n_probe, state, klo, khi, trows, sid_lo,
@@ -1054,7 +1087,7 @@ class Federation:
     ``query_bytes`` (host-merge: every site's state) and
     ``collective_query_bytes`` (the collective's operand bytes)."""
 
-    def __init__(self, sites: List[str], backend: str = "xla",
+    def __init__(self, sites: List[str], backend: Optional[str] = None,
                  mesh: Optional[Mesh] = None):
         self.sites = list(sites)
         self.mesh = mesh

@@ -67,6 +67,63 @@ def test_hll_kernel_sweep(t, n, p):
     assert (np.asarray(out_k) == np.asarray(out_r)).all()
 
 
+@pytest.mark.parametrize("t,n,log2b,k", [
+    (100, 3, 8, 4), (513, 16, 9, 6), (256, 8, 7, 3),
+])
+def test_bloom_kernel_sweep(t, n, log2b, k):
+    rng = np.random.RandomState(t + k)
+    seeds = jnp.asarray(hashing.row_seeds(17, k))
+    bits = jnp.asarray(rng.randint(0, 2, (n, 1 << log2b)).astype(np.int32))
+    syn = rng.randint(-1, n, t).astype(np.int32)    # -1 = unrouted no-op
+    items = rng.randint(0, 10**6, t).astype(np.uint32)
+    mask = rng.rand(t) > 0.3
+    out_k = ops.bloom_update(bits, jnp.asarray(syn), jnp.asarray(items),
+                             jnp.asarray(mask), seeds=seeds,
+                             log2_bits=log2b)
+    idx = hashing.bucket_hash(jnp.asarray(items), seeds, log2b)
+    out_r = ref.bitset_max_update(bits, jnp.asarray(syn), idx,
+                                  jnp.asarray(mask).astype(jnp.int32))
+    assert (np.asarray(out_k) == np.asarray(out_r)).all()
+
+
+@pytest.mark.parametrize("t,n,maps,nbits", [
+    (100, 3, 8, 16), (513, 16, 64, 32), (256, 9, 16, 24),
+])
+def test_fm_kernel_sweep(t, n, maps, nbits):
+    rng = np.random.RandomState(t + maps)
+    state = jnp.asarray(rng.randint(0, 2, (n, maps, nbits)).astype(np.int32))
+    syn = rng.randint(-1, n, t).astype(np.int32)
+    which = rng.randint(0, maps, t).astype(np.int32)
+    pos = rng.randint(0, nbits, t).astype(np.int32)
+    mask = rng.rand(t) > 0.3
+    out_k = ops.fm_update(state, jnp.asarray(syn), jnp.asarray(which),
+                          jnp.asarray(pos), jnp.asarray(mask))
+    out_r = ref.fm_bit_update(state, jnp.asarray(syn), jnp.asarray(which),
+                              jnp.asarray(pos),
+                              jnp.asarray(mask).astype(jnp.int32))
+    assert (np.asarray(out_k) == np.asarray(out_r)).all()
+
+
+@pytest.mark.parametrize("t,n,b", [(100, 3, 64), (700, 130, 64),
+                                   (513, 16, 200)])
+def test_rhp_kernel_sweep(t, n, b):
+    rng = np.random.RandomState(t + b)
+    seeds = jnp.asarray(hashing.row_seeds(29, b))
+    state = jnp.asarray(rng.randn(n, b).astype(np.float32))
+    syn = rng.randint(-1, n, t).astype(np.int32)
+    items = rng.randint(0, 10**6, t).astype(np.uint32)
+    vals = rng.randn(t).astype(np.float32)
+    mask = rng.rand(t) > 0.2
+    out_k = ops.rhp_update(state, jnp.asarray(syn), jnp.asarray(items),
+                           jnp.asarray(vals), jnp.asarray(mask),
+                           seeds=seeds)
+    sgn = hashing.sign_hash(jnp.asarray(items), seeds)
+    out_r = ref.rhp_project_update(state, jnp.asarray(syn),
+                                   jnp.asarray(vals * mask), sgn)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-4)
+
+
 @pytest.mark.parametrize("s,f", [(100, 8), (512, 16), (1111, 4)])
 def test_dft_kernel_sweep(s, f):
     rng = np.random.RandomState(s)
