@@ -6,6 +6,7 @@ bucketing — the paper's core loop end to end on one CPU.
 
   PYTHONPATH=src python examples/quickstart.py
 """
+import asyncio
 import json
 
 import numpy as np
@@ -104,6 +105,47 @@ def main():
                      "synopsis_id": "kbids/42", "query": {"items": [42]}})
     print(f"\npallas backend: stock 42 bid volume (CM) "
           f"{float(q.value[0]):,.1f} via fused probe+update kernel")
+
+    # 2d. Serving many clients: the `SynopsisGateway` front door
+    #     multiplexes N concurrent clients onto ONE engine. Per tick it
+    #     concatenates every client's ingest into one fused blue-path
+    #     dispatch per kind (the acks below all carry the same batch id
+    #     and coalesced=8) and folds concurrent ad-hoc queries into one
+    #     `query_many` dispatch. A request's `tenant` namespaces its
+    #     synopsis keys ("acme::cm" vs "globex::cm" in the engine) while
+    #     STREAM ids stay shared — many workflows, same streams — which
+    #     is exactly what makes their traffic coalescible.
+    #     `python -m repro.launch.sde_server --port 7077` serves this
+    #     over TCP with per-client backpressure.
+    async def serve_clients():
+        from repro.service import SynopsisGateway
+        gw = SynopsisGateway(SDE(), tick_interval=0.001)
+        await gw.start()
+
+        async def one_client(j):
+            tenant = "acme" if j % 2 else "globex"
+            c = gw.connect(f"client-{j}", tenant=tenant)
+            r = await gw.submit(c, {
+                "type": "build", "request_id": f"b{j}",
+                "synopsis_id": f"cm{j}", "kind": "countmin",
+                "params": {"eps": 0.05, "delta": 0.1, "weighted": False}})
+            assert r.ok, r.error
+            rng = np.random.RandomState(j)
+            r = await gw.submit(c, {
+                "type": "ingest", "request_id": f"i{j}",
+                "stream_ids": rng.randint(0, 500, 64).tolist(),
+                "values": [1.0] * 64})
+            return r.value
+
+        acks = await asyncio.gather(*(one_client(j) for j in range(8)))
+        await gw.stop()
+        return acks
+
+    acks = asyncio.run(serve_clients())
+    coalesced = max(a["coalesced"] for a in acks)
+    print(f"\ngateway: 8 clients' ingest coalesced "
+          f"{coalesced}-wide into {len({a['batch'] for a in acks})} "
+          f"fused batch(es) — dispatch cost amortizes across clients")
 
     # 3. Ad-hoc queries (red path).
     q = sde.handle({"type": "adhoc", "request_id": "q1",

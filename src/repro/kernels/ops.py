@@ -181,6 +181,23 @@ def note_in_flight(tag: str, depth: int) -> None:
         PIPELINE_MAX_IN_FLIGHT[tag] = depth
 
 
+# Gateway coalescing probes: the multi-client micro-batcher
+# (service/gateway.py) reports how many client requests each fused
+# dispatch absorbed. ``GATEWAY_TICKS`` counts micro-batcher ticks per
+# gateway tag; ``GATEWAY_COALESCED`` counts client requests folded into
+# coalesced engine calls, keyed by request class ("ingest" / "query").
+# Tests pair these with TRACE_COUNT/DISPATCH_COUNT to assert that N
+# concurrent clients cost ONE blue-path dispatch per kind per tick —
+# serving cost scales with tick count, not client count.
+GATEWAY_TICKS: collections.Counter = collections.Counter()
+GATEWAY_COALESCED: collections.Counter = collections.Counter()
+
+
+def note_coalesced(klass: str, n: int) -> None:
+    """Record ``n`` client requests coalesced into one engine call."""
+    GATEWAY_COALESCED[klass] += n
+
+
 _KIND_CACHES: list["KindCache"] = []
 
 

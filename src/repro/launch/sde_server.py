@@ -1,35 +1,52 @@
-"""JSON-lines SDEaaS front end — the launch-layer driver for the engine.
+"""SDEaaS front end — JSON-lines driver and multi-client socket server.
 
-One JSON request per input line (the paper's Kafka RequestTopic contract,
-Section 3), one JSON response per output line. Blue-path data rides the
-same channel as control/queries via ``{"type": "ingest", ...}`` — its
-ack carries the monotonic batch counter — and ``{"type": "flush"}`` is
-the explicit pipeline barrier. Continuous-query responses are
-interleaved into the output as their batches retire: immediately after
-each request on an eager engine, deferred until the bounded pipeline
-retires the batch (or a flush/fence drains it) on a pipelined one. EOF
-performs a final flush so no continuous response is ever lost.
+Two serving modes over the same JSON request contract (the paper's Kafka
+RequestTopic, Section 3):
 
-  PYTHONPATH=src python -m repro.launch.sde_server --pipelined \
-      < requests.jsonl > responses.jsonl
+  * **JSON-lines** (default; kept for tests and one-shot replay): one
+    request per input line, one response per output line, continuous
+    responses interleaved as their batches retire. EOF — or a
+    ``{"type": "shutdown"}`` request — performs a final flush so no
+    continuous response is ever lost.
+
+      PYTHONPATH=src python -m repro.launch.sde_server --pipelined \
+          < requests.jsonl > responses.jsonl
+
+  * **Socket server** (``--port``): N concurrent newline-delimited-JSON
+    TCP clients multiplexed onto ONE engine through the
+    ``SynopsisGateway`` micro-batcher — concurrent ingest coalesces to
+    one fused blue-path dispatch per kind per tick, concurrent queries
+    to one stacked-estimate dispatch, and each connection receives only
+    its own acks plus the continuous responses of the synopses it
+    built. Admission control (``--max-in-flight``) delays reads — and
+    therefore acks — when a client floods, pushing backpressure into
+    its TCP window instead of the engine's queue.
+
+      PYTHONPATH=src python -m repro.launch.sde_server --port 7077 \
+          --pipelined
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
+import contextlib
+import itertools
+import json
 import sys
 from typing import IO, Iterable, Optional
 
-from repro.service import SDE
+from repro.service import SDE, api
+from repro.service.gateway import SynopsisGateway
 
 
 def _drain_continuous(sde: SDE, out: IO[str]) -> int:
-    """Pop every retired continuous response onto the wire (in emission
-    order — the log is append-right, so we pop from the left)."""
-    n = 0
-    while sde.continuous_out:
-        out.write(sde.continuous_out.popleft().to_json() + "\n")
-        n += 1
-    return n
+    """Write every retired continuous response (emission order) with ONE
+    write call — a pipelined drain can retire thousands of responses at
+    once, and one syscall per response dominated the drain cost."""
+    rs = sde.continuous_out.drain()
+    if rs:
+        out.write("".join(r.to_json() + "\n" for r in rs))
+    return len(rs)
 
 
 def serve_lines(lines: Iterable[str], sde: Optional[SDE] = None, *,
@@ -37,8 +54,10 @@ def serve_lines(lines: Iterable[str], sde: Optional[SDE] = None, *,
     """Drive ``sde`` (or a fresh eager/env-default engine) with
     JSON-lines requests; write one response line per request plus the
     continuous responses retired so far. Construct the SDE yourself to
-    pick the execution mode (``SDE(pipelined=True, ...)``). Returns the
-    number of requests handled."""
+    pick the execution mode (``SDE(pipelined=True, ...)``). Stops after
+    acking a successful ``shutdown`` (the engine has already flushed and
+    closed); plain EOF gets the same final flush. Returns the number of
+    requests handled."""
     if sde is None:
         sde = SDE()
     n_requests = 0
@@ -46,12 +65,133 @@ def serve_lines(lines: Iterable[str], sde: Optional[SDE] = None, *,
         line = line.strip()
         if not line:
             continue
-        out.write(sde.handle(line).to_json() + "\n")
+        try:
+            req = json.loads(line)
+        except json.JSONDecodeError:
+            req = line               # engine's handler reports the error
+        resp = sde.handle(req)
+        out.write(resp.to_json() + "\n")
         n_requests += 1
         _drain_continuous(sde, out)
+        if resp.ok and isinstance(req, dict) \
+                and req.get("type") == "shutdown":
+            return n_requests        # shutdown already flushed + closed
     sde.flush()                      # final barrier: retire everything
     _drain_continuous(sde, out)
     return n_requests
+
+
+async def serve_socket(sde: Optional[SDE] = None,
+                       host: str = "127.0.0.1", port: int = 0, *,
+                       tick_interval: float = 0.001,
+                       max_in_flight: int = 8,
+                       client_log_cap: Optional[int] = 1024,
+                       ready: Optional[asyncio.Future] = None,
+                       err: IO[str] = sys.stderr) -> SynopsisGateway:
+    """Run the multi-client socket server until a client sends a
+    successful ``{"type": "shutdown"}``. ``port=0`` binds an ephemeral
+    port; the bound port is announced on ``err`` and resolved into
+    ``ready`` (when given), so tests can connect without racing. Returns
+    the gateway (engine closed, probes/commit log intact)."""
+    gw = SynopsisGateway(sde, tick_interval=tick_interval,
+                         max_in_flight=max_in_flight,
+                         client_log_cap=client_log_cap)
+    await gw.start()
+    conn_seq = itertools.count()
+    writers = set()
+
+    async def handle_conn(reader: asyncio.StreamReader,
+                          writer: asyncio.StreamWriter) -> None:
+        client = gw.connect(f"conn-{next(conn_seq)}")
+        writers.add(writer)
+        wlock = asyncio.Lock()       # acks and continuous pushes interleave
+        pending = set()
+
+        async def write_lines(text: str) -> None:
+            async with wlock:
+                writer.write(text.encode())
+                await writer.drain()
+
+        async def finish(fut) -> None:
+            try:
+                await write_lines((await fut).to_json() + "\n")
+            except (ConnectionError, RuntimeError):
+                pass                 # client gone mid-ack
+            finally:
+                client.release()
+
+        async def push_continuous() -> None:
+            while True:
+                await client.wakeup.wait()
+                client.wakeup.clear()
+                rs = client.log.drain()
+                if rs:
+                    await write_lines(
+                        "".join(r.to_json() + "\n" for r in rs))
+
+        pusher = asyncio.create_task(push_continuous())
+        try:
+            while True:
+                # admission control: no read until a response slot frees,
+                # so a flooding client sees delayed acks (TCP backpressure)
+                await client.admit()
+                line = await reader.readline()
+                if not line:
+                    client.release()
+                    break
+                line = line.strip()
+                if not line:
+                    client.release()
+                    continue
+                try:
+                    req = json.loads(line)
+                    if not isinstance(req, dict):
+                        raise ValueError("request must be a JSON object")
+                except Exception as e:  # noqa: BLE001 - report, keep serving
+                    await write_lines(api.Response(
+                        request_id="", ok=False,
+                        error=repr(e)).to_json() + "\n")
+                    client.release()
+                    continue
+                task = asyncio.create_task(
+                    finish(gw.submit_nowait(client, req)))
+                pending.add(task)
+                task.add_done_callback(pending.discard)
+                if req.get("type") == "shutdown":
+                    break            # ack (in flight) is this conn's last line
+        finally:
+            if pending:
+                await asyncio.gather(*pending, return_exceptions=True)
+            pusher.cancel()
+            with contextlib.suppress(asyncio.CancelledError):
+                await pusher
+            rs = client.log.drain()
+            if rs:                   # final push of routed continuous output
+                with contextlib.suppress(ConnectionError, RuntimeError):
+                    await write_lines(
+                        "".join(r.to_json() + "\n" for r in rs))
+            gw.disconnect(client)
+            writers.discard(writer)
+            with contextlib.suppress(ConnectionError):
+                writer.close()
+
+    server = await asyncio.start_server(handle_conn, host, port)
+    bound = server.sockets[0].getsockname()[1]
+    print(f"[sde-server] listening on {host}:{bound}", file=err, flush=True)
+    if ready is not None and not ready.done():
+        ready.set_result(bound)
+    async with server:
+        await gw.closed_event.wait()
+        await asyncio.sleep(0.05)    # let shutdown acks reach their clients
+        server.close()
+        await server.wait_closed()
+        for w in list(writers):      # EOF every idle connection
+            with contextlib.suppress(ConnectionError):
+                w.close()
+        while writers:               # their handlers finish promptly
+            await asyncio.sleep(0.01)
+    await gw.stop()
+    return gw
 
 
 def main(argv=None):
@@ -61,16 +201,36 @@ def main(argv=None):
     ap.add_argument("--depth", type=int, default=2,
                     help="pipeline depth (in-flight ingest batches)")
     ap.add_argument("--input", default="-",
-                    help="requests file, '-' for stdin")
+                    help="requests file, '-' for stdin (JSON-lines mode)")
+    ap.add_argument("--port", type=int, default=None,
+                    help="serve N concurrent TCP clients through the "
+                         "micro-batching gateway (0 = ephemeral port)")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="bind address for --port mode")
+    ap.add_argument("--tick", type=float, default=0.001,
+                    help="gateway micro-batch tick interval, seconds")
+    ap.add_argument("--max-in-flight", type=int, default=8,
+                    help="per-client admission-control window")
     args = ap.parse_args(argv)
-    lines = sys.stdin if args.input == "-" else open(args.input)
     sde = SDE(pipelined=args.pipelined, pipeline_depth=args.depth)
-    n = serve_lines(lines, sde)
-    print(f"[sde-server] handled {n} requests; "
-          f"{sde.tuples_ingested:,} tuples in {sde.batches_ingested} "
-          f"batches; continuous dropped={sde.continuous_out.dropped}",
-          file=sys.stderr)
-    return n
+    try:
+        if args.port is not None:
+            gw = asyncio.run(serve_socket(
+                sde, args.host, args.port, tick_interval=args.tick,
+                max_in_flight=args.max_in_flight))
+            n = gw.requests
+        elif args.input == "-":
+            n = serve_lines(sys.stdin, sde)
+        else:
+            with open(args.input) as fh:
+                n = serve_lines(fh, sde)
+        print(f"[sde-server] handled {n} requests; "
+              f"{sde.tuples_ingested:,} tuples in {sde.batches_ingested} "
+              f"batches; continuous dropped={sde.continuous_out.dropped}",
+              file=sys.stderr)
+        return n
+    finally:
+        sde.close()                  # idempotent after a shutdown request
 
 
 if __name__ == "__main__":

@@ -1,15 +1,17 @@
 # SDE-as-a-Service: the always-on engine, its JSON API, the pipelined
-# blue path and the accuracy-budget workflow planner (paper Sections 3,
-# 4, 7).
+# blue path, the multi-client micro-batching gateway and the
+# accuracy-budget workflow planner (paper Sections 3, 4, 7).
 from .api import (Request, Response, parse_request, BuildSynopsis,
                   StopSynopsis, LoadSynopsis, AdHocQuery, FederatedQuery,
-                  QueryMany, Ingest, Flush, StatusReport)
+                  QueryMany, Ingest, Flush, Shutdown, StatusReport)
 from .engine import SDE, Federation
+from .gateway import GatewayClient, SynopsisGateway, replay_log
 from .pipeline import BoundedResponseLog, IngestPipeline, PendingBatch
 from .planner import Planner, WorkflowSpec
 
 __all__ = ["Request", "Response", "parse_request", "BuildSynopsis",
            "StopSynopsis", "LoadSynopsis", "AdHocQuery", "FederatedQuery",
-           "QueryMany", "Ingest", "Flush", "StatusReport", "SDE",
-           "Federation", "BoundedResponseLog", "IngestPipeline",
+           "QueryMany", "Ingest", "Flush", "Shutdown", "StatusReport",
+           "SDE", "Federation", "GatewayClient", "SynopsisGateway",
+           "replay_log", "BoundedResponseLog", "IngestPipeline",
            "PendingBatch", "Planner", "WorkflowSpec"]

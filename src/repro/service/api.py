@@ -13,7 +13,21 @@ from typing import Any, Dict, List, Optional
 
 @dataclasses.dataclass
 class Request:
+    """Every request carries an id plus optional multi-client routing
+    fields (used by the gateway front door, ignored by a bare engine):
+
+    tenant: synopsis-namespace key. The gateway prefixes every
+      ``synopsis_id`` with ``"<tenant>::"`` so tenants can neither
+      address nor collide with each other's synopses. The STREAM id
+      space stays shared — the paper's claim (e): many concurrent
+      workflows maintain synopses over the same streams.
+    client_id: identifies the submitting client within a connection;
+      continuous-query responses route to the building client's bounded
+      per-client response log.
+    """
     request_id: str
+    tenant: str = ""
+    client_id: str = ""
 
 
 @dataclasses.dataclass
@@ -118,6 +132,15 @@ class Flush(Request):
 
 
 @dataclasses.dataclass
+class Shutdown(Request):
+    """Clean stop over the wire: flush every in-flight batch, release
+    the engine's kind stacks and compiled-program caches (``SDE.close``)
+    and ack with final counters. The JSON-lines server stops serving
+    after acking; a socket client gets a clean stop it could never
+    signal via EOF without dropping the connection mid-response."""
+
+
+@dataclasses.dataclass
 class StatusReport(Request):
     pass
 
@@ -156,6 +179,7 @@ _KINDS = {
     "query_many": QueryMany,
     "ingest": Ingest,
     "flush": Flush,
+    "shutdown": Shutdown,
     "status": StatusReport,
 }
 

@@ -303,6 +303,8 @@ class SDE:
                 return self._ingest_req(req)
             if isinstance(req, api.Flush):
                 return self._flush_req(req)
+            if isinstance(req, api.Shutdown):
+                return self._shutdown_req(req)
             if isinstance(req, api.StatusReport):
                 return self._status(req)
             raise ValueError(f"unhandled request {req}")
@@ -504,6 +506,22 @@ class SDE:
                        batches_ingested=self.batches_ingested,
                        continuous_unread=len(self.continuous_out),
                        continuous_dropped=self.continuous_out.dropped))
+
+    def _shutdown_req(self, req: api.Shutdown) -> api.Response:
+        """Clean stop: flush (the pending continuous batches land in
+        ``continuous_out`` before the ack), then ``close()`` — stacks and
+        this engine's compiled-program cache entries are released. The
+        ack carries the final counters; the engine object stays usable
+        (a later build simply re-allocates)."""
+        drained = self.flush()
+        value = dict(drained=drained,
+                     tuples_ingested=self.tuples_ingested,
+                     batches_ingested=self.batches_ingested,
+                     synopses=len(self.entries),
+                     continuous_unread=len(self.continuous_out),
+                     continuous_dropped=self.continuous_out.dropped)
+        self.close()
+        return api.Response(request_id=req.request_id, value=value)
 
     def _status(self, req: api.StatusReport) -> api.Response:
         per_row = {k: s.row_bytes() for k, s in self.stacks.items()}

@@ -41,10 +41,12 @@ from repro.kernels import ops as kops
 
 
 class BoundedResponseLog(collections.deque):
-    """``continuous_out``: a deque bounded at ``cap`` responses. When
-    full, appending evicts the oldest response and counts it in
-    ``dropped`` (the continuous stream keeps flowing; a consumer that
-    falls behind loses the oldest results, never the newest)."""
+    """A bounded response sink: the engine's global ``continuous_out``
+    and — through the gateway — one log per connected client. A deque
+    bounded at ``cap`` responses; when full, appending evicts the oldest
+    response and counts it in ``dropped`` (the continuous stream keeps
+    flowing; a consumer that falls behind loses the oldest results,
+    never the newest)."""
 
     def __init__(self, cap: Optional[int] = 65536):
         super().__init__(maxlen=cap if cap and cap > 0 else None)
@@ -54,6 +56,15 @@ class BoundedResponseLog(collections.deque):
         if self.maxlen is not None and len(self) == self.maxlen:
             self.dropped += 1        # deque(maxlen) evicts from the left
         super().append(response)
+
+    def drain(self) -> List[Any]:
+        """Pop EVERY unread response, oldest first — one call per
+        consumer wake-up, so a server writes a whole backlog with one
+        syscall instead of one write per response."""
+        out = []
+        while self:
+            out.append(self.popleft())
+        return out
 
 
 @dataclasses.dataclass
