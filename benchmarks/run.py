@@ -16,15 +16,17 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (5000 streams)")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig5,fig6,fig7,fig8,fig9,fig10")
+                    help="comma list: fig5,fig6,fig7,fig8,fig9,fig10,"
+                         "fig11")
     args = ap.parse_args(argv)
 
     from . import fig5_scalability, fig6_dft_workflow, fig7_coreset, \
-        fig8_sdeaas, fig9_routing, fig10_gateway
+        fig8_sdeaas, fig9_routing, fig10_gateway, fig11_elasticity
 
     figs = dict(fig5=fig5_scalability, fig6=fig6_dft_workflow,
                 fig7=fig7_coreset, fig8=fig8_sdeaas,
-                fig9=fig9_routing, fig10=fig10_gateway)
+                fig9=fig9_routing, fig10=fig10_gateway,
+                fig11=fig11_elasticity)
     only = set(args.only.split(",")) if args.only else set(figs)
 
     print("name,us_per_call,derived")

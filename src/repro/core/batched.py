@@ -42,6 +42,13 @@ def grow(kind: Synopsis, stacked: Any, new_capacity: int) -> Any:
         lambda x, f: jnp.concatenate([x, f], axis=0), stacked, fresh)
 
 
+def shrink(stacked: Any, new_capacity: int) -> Any:
+    """Drop trailing rows (the grow() inverse). The caller — the
+    migration plane — must have compacted live rows below
+    ``new_capacity`` first; anything above the cut is discarded."""
+    return jax.tree.map(lambda x: x[:new_capacity], stacked)
+
+
 def stacked_add_batch(kind: Synopsis, stacked: Any, syn_idx: jax.Array,
                       items: jax.Array, values: jax.Array,
                       mask: jax.Array) -> Any:

@@ -198,6 +198,30 @@ def note_coalesced(klass: str, n: int) -> None:
     GATEWAY_COALESCED[klass] += n
 
 
+# Elasticity probes: the reconciler (service/reconciler.py) and the
+# migration plane (service/migration.py via SDE.migrate_rows /
+# implant_synopses) report the control loop's work. ``RECONCILE_COUNT``
+# counts reconcile passes per tag (engine site or federation),
+# ``MIGRATED_ROWS`` totals rows moved by the plane per engine site, and
+# ``REBALANCE_IMBALANCE`` gauges the latest max/mean worker-load ratio a
+# reconcile observed (1.0 = perfectly balanced). All three surface
+# through ``SDE._status`` into the JSON status response.
+RECONCILE_COUNT: collections.Counter = collections.Counter()
+MIGRATED_ROWS: collections.Counter = collections.Counter()
+REBALANCE_IMBALANCE: collections.Counter = collections.Counter()
+
+
+def note_migrated(site: str, n_rows: int) -> None:
+    """Record ``n_rows`` rows moved by the migration plane."""
+    MIGRATED_ROWS[site] += n_rows
+
+
+def note_reconcile(tag: str, imbalance: float) -> None:
+    """Record one reconcile pass and the imbalance it measured."""
+    RECONCILE_COUNT[tag] += 1
+    REBALANCE_IMBALANCE[tag] = float(imbalance)
+
+
 _KIND_CACHES: list["KindCache"] = []
 
 

@@ -50,14 +50,16 @@ def _drain_continuous(sde: SDE, out: IO[str]) -> int:
 
 
 def serve_lines(lines: Iterable[str], sde: Optional[SDE] = None, *,
-                out: IO[str] = sys.stdout) -> int:
+                out: IO[str] = sys.stdout, reconciler=None) -> int:
     """Drive ``sde`` (or a fresh eager/env-default engine) with
     JSON-lines requests; write one response line per request plus the
     continuous responses retired so far. Construct the SDE yourself to
     pick the execution mode (``SDE(pipelined=True, ...)``). Stops after
     acking a successful ``shutdown`` (the engine has already flushed and
-    closed); plain EOF gets the same final flush. Returns the number of
-    requests handled."""
+    closed); plain EOF gets the same final flush. A ``reconciler``
+    rides the request loop (``maybe_step`` after each request — its
+    interval does the throttling). Returns the number of requests
+    handled."""
     if sde is None:
         sde = SDE()
     n_requests = 0
@@ -76,6 +78,12 @@ def serve_lines(lines: Iterable[str], sde: Optional[SDE] = None, *,
         if resp.ok and isinstance(req, dict) \
                 and req.get("type") == "shutdown":
             return n_requests        # shutdown already flushed + closed
+        if reconciler is not None:
+            try:
+                reconciler.maybe_step()
+            except Exception as e:  # noqa: BLE001 - serving must survive
+                print(f"[sde-server] reconcile error: {e!r}",
+                      file=sys.stderr)
     sde.flush()                      # final barrier: retire everything
     _drain_continuous(sde, out)
     return n_requests
@@ -87,15 +95,18 @@ async def serve_socket(sde: Optional[SDE] = None,
                        max_in_flight: int = 8,
                        client_log_cap: Optional[int] = 1024,
                        ready: Optional[asyncio.Future] = None,
-                       err: IO[str] = sys.stderr) -> SynopsisGateway:
+                       err: IO[str] = sys.stderr,
+                       reconciler=None) -> SynopsisGateway:
     """Run the multi-client socket server until a client sends a
     successful ``{"type": "shutdown"}``. ``port=0`` binds an ephemeral
     port; the bound port is announced on ``err`` and resolved into
-    ``ready`` (when given), so tests can connect without racing. Returns
-    the gateway (engine closed, probes/commit log intact)."""
+    ``ready`` (when given), so tests can connect without racing. A
+    ``reconciler`` rides the gateway tick. Returns the gateway (engine
+    closed, probes/commit log intact)."""
     gw = SynopsisGateway(sde, tick_interval=tick_interval,
                          max_in_flight=max_in_flight,
-                         client_log_cap=client_log_cap)
+                         client_log_cap=client_log_cap,
+                         reconciler=reconciler)
     await gw.start()
     conn_seq = itertools.count()
     writers = set()
@@ -211,19 +222,42 @@ def main(argv=None):
                     help="gateway micro-batch tick interval, seconds")
     ap.add_argument("--max-in-flight", type=int, default=8,
                     help="per-client admission-control window")
+    ap.add_argument("--reconcile-interval", type=float, default=None,
+                    help="run the elasticity reconciler every S seconds "
+                         "(off the gateway tick in --port mode, off the "
+                         "request loop otherwise)")
+    ap.add_argument("--reconcile-hll", default="reconcile-hll",
+                    help="synopsis id of the estimator HLL "
+                         "(#pieces of work)")
+    ap.add_argument("--reconcile-cm", default="reconcile-cm",
+                    help="synopsis id of the estimator CountMin "
+                         "(per-piece load)")
+    ap.add_argument("--reconcile-workers", type=int, default=None,
+                    help="worker-slice count for placement (default: the "
+                         "synopsis mesh axis size)")
     args = ap.parse_args(argv)
     sde = SDE(pipelined=args.pipelined, pipeline_depth=args.depth)
+    reconciler = None
+    if args.reconcile_interval is not None:
+        from repro.service.reconciler import Reconciler
+        # None when the flag is unset — the Reconciler then infers the
+        # synopsis mesh axis size (the documented default) and raises a
+        # clear ValueError when there is neither a mesh nor a flag
+        reconciler = Reconciler(
+            sde, args.reconcile_hll, args.reconcile_cm,
+            n_workers=args.reconcile_workers,
+            interval=args.reconcile_interval)
     try:
         if args.port is not None:
             gw = asyncio.run(serve_socket(
                 sde, args.host, args.port, tick_interval=args.tick,
-                max_in_flight=args.max_in_flight))
+                max_in_flight=args.max_in_flight, reconciler=reconciler))
             n = gw.requests
         elif args.input == "-":
-            n = serve_lines(sys.stdin, sde)
+            n = serve_lines(sys.stdin, sde, reconciler=reconciler)
         else:
             with open(args.input) as fh:
-                n = serve_lines(fh, sde)
+                n = serve_lines(fh, sde, reconciler=reconciler)
         print(f"[sde-server] handled {n} requests; "
               f"{sde.tuples_ingested:,} tuples in {sde.batches_ingested} "
               f"batches; continuous dropped={sde.continuous_out.dropped}",

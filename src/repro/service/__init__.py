@@ -1,17 +1,26 @@
 # SDE-as-a-Service: the always-on engine, its JSON API, the pipelined
-# blue path, the multi-client micro-batching gateway and the
-# accuracy-budget workflow planner (paper Sections 3, 4, 7).
+# blue path, the multi-client micro-batching gateway, the row-granular
+# migration plane + elasticity reconciler, and the accuracy-budget
+# workflow planner (paper Sections 3, 4, 7).
 from .api import (Request, Response, parse_request, BuildSynopsis,
                   StopSynopsis, LoadSynopsis, AdHocQuery, FederatedQuery,
                   QueryMany, Ingest, Flush, Shutdown, StatusReport)
+from .balancer import (Placement, PlacementDelta, estimate_workload,
+                       plan_workers, worst_fit_decreasing)
 from .engine import SDE, Federation
 from .gateway import GatewayClient, SynopsisGateway, replay_log
+from .migration import (RowPayload, extract_rows, implant_rows,
+                        move_rows)
 from .pipeline import BoundedResponseLog, IngestPipeline, PendingBatch
 from .planner import Planner, WorkflowSpec
+from .reconciler import Reconciler
 
 __all__ = ["Request", "Response", "parse_request", "BuildSynopsis",
            "StopSynopsis", "LoadSynopsis", "AdHocQuery", "FederatedQuery",
            "QueryMany", "Ingest", "Flush", "Shutdown", "StatusReport",
+           "Placement", "PlacementDelta", "estimate_workload",
+           "plan_workers", "worst_fit_decreasing",
            "SDE", "Federation", "GatewayClient", "SynopsisGateway",
-           "replay_log", "BoundedResponseLog", "IngestPipeline",
-           "PendingBatch", "Planner", "WorkflowSpec"]
+           "replay_log", "RowPayload", "extract_rows", "implant_rows",
+           "move_rows", "BoundedResponseLog", "IngestPipeline",
+           "PendingBatch", "Planner", "WorkflowSpec", "Reconciler"]

@@ -11,12 +11,38 @@ on skewed streams.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+import heapq
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from . import api
 from .engine import SDE
+
+
+@dataclasses.dataclass
+class PlacementDelta:
+    """The minimal move set turning one placement into another — the
+    reconciler's work order. ``target`` is the target placement with its
+    worker labels rewritten to maximally overlap ``prev`` (see
+    :meth:`Placement.diff`); ``moves`` lists ``(stream, src_worker,
+    dst_worker)`` with ``src_worker=None`` for streams new in the
+    target; ``dropped`` lists streams that left."""
+
+    moves: List[Tuple[int, Optional[int], int]]
+    dropped: List[int]
+    target: "Placement"
+
+    def apply(self, prev: "Placement") -> Dict[int, int]:
+        """Replay the delta onto ``prev``'s assignment — by construction
+        this reproduces ``target.assignments`` exactly (the property the
+        tests lock)."""
+        dropped = set(self.dropped)
+        out = {s: w for s, w in prev.assignments.items()
+               if s not in dropped}
+        for s, _, dst in self.moves:
+            out[s] = dst
+        return out
 
 
 @dataclasses.dataclass
@@ -30,6 +56,92 @@ class Placement:
         """max/mean load ratio (1.0 = perfect)."""
         mean = max(float(np.mean(self.loads)), 1e-9)
         return float(np.max(self.loads)) / mean
+
+    def diff(self, prev: "Placement") -> PlacementDelta:
+        """Minimal stream moves from ``prev`` to this placement.
+
+        WFD assigns worker labels arbitrarily (bin 0 of the new plan has
+        no relation to bin 0 of the old), so a naive label-wise diff
+        moves nearly everything. When worker counts match, the target's
+        labels are first permuted to maximize stream overlap with
+        ``prev`` — an exact assignment problem solved by the Hungarian
+        method on the overlap matrix (W is the worker pool, so O(W^3)
+        is nothing) — and only streams whose *relabeled* worker changed
+        move. Different worker counts skip relabeling (labels are
+        incomparable across pool sizes)."""
+        target = self
+        if prev.n_workers == self.n_workers and self.n_workers > 1:
+            w = self.n_workers
+            overlap = np.zeros((w, w), np.int64)
+            for s, nw in self.assignments.items():
+                pw = prev.assignments.get(s)
+                if pw is not None:
+                    overlap[nw, pw] += 1
+            perm = _max_overlap_labels(overlap)
+            if any(perm[i] != i for i in range(w)):
+                loads = [0.0] * w
+                for i, load in enumerate(self.loads):
+                    loads[perm[i]] = load
+                target = Placement(
+                    assignments={s: perm[nw] for s, nw
+                                 in self.assignments.items()},
+                    loads=loads, n_workers=w)
+        moves = []
+        for s in sorted(target.assignments):
+            tw = target.assignments[s]
+            pw = prev.assignments.get(s)
+            if pw != tw:
+                moves.append((s, pw, tw))
+        dropped = sorted(s for s in prev.assignments
+                         if s not in target.assignments)
+        return PlacementDelta(moves=moves, dropped=dropped, target=target)
+
+
+def _max_overlap_labels(overlap: np.ndarray) -> List[int]:
+    """Exact max-weight label matching: ``perm[new_worker] ->
+    prev_label`` maximizing ``sum(overlap[nw, perm[nw]])`` (Hungarian
+    method with potentials, O(W^3), deterministic)."""
+    n = overlap.shape[0]
+    cost = (overlap.max() - overlap).astype(np.float64)  # minimize
+    INF = float("inf")
+    u = [0.0] * (n + 1)
+    v = [0.0] * (n + 1)
+    p = [0] * (n + 1)        # p[col] = row matched to col (1-based)
+    way = [0] * (n + 1)
+    for i in range(1, n + 1):
+        p[0] = i
+        j0 = 0
+        minv = [INF] * (n + 1)
+        used = [False] * (n + 1)
+        while True:
+            used[j0] = True
+            i0, delta, j1 = p[j0], INF, -1
+            for j in range(1, n + 1):
+                if not used[j]:
+                    cur = cost[i0 - 1][j - 1] - u[i0] - v[j]
+                    if cur < minv[j]:
+                        minv[j] = cur
+                        way[j] = j0
+                    if minv[j] < delta:
+                        delta = minv[j]
+                        j1 = j
+            for j in range(n + 1):
+                if used[j]:
+                    u[p[j]] += delta
+                    v[j] -= delta
+                else:
+                    minv[j] -= delta
+            j0 = j1
+            if p[j0] == 0:
+                break
+        while j0:
+            j1 = way[j0]
+            p[j0] = p[j1]
+            j0 = j1
+    perm = [0] * n
+    for j in range(1, n + 1):
+        perm[p[j] - 1] = j - 1
+    return perm
 
 
 def estimate_workload(sde: SDE, hll_id: str, cm_id: str,
@@ -58,14 +170,25 @@ def estimate_workload(sde: SDE, hll_id: str, cm_id: str,
 def worst_fit_decreasing(stream_ids: Sequence[int],
                          stream_loads: Sequence[float],
                          n_workers: int) -> Placement:
-    """WFD bin packing: heaviest piece first, into the least-loaded bin."""
-    order = np.argsort(-np.asarray(stream_loads))
+    """WFD bin packing: heaviest piece first, into the least-loaded bin.
+
+    The bin scan is a heap — O(n log w), not the old O(n·w) per-item
+    ``np.argmin`` — and fully deterministic: items sort by decreasing
+    load with input order breaking load ties (stable sort), and equally
+    loaded bins hand out the LOWEST worker id first (the ``(load, id)``
+    heap key), so the same estimates always produce the same placement
+    (reconcilers must not flap between equivalent plans)."""
+    loads_arr = np.asarray(stream_loads, np.float64)
+    order = np.argsort(-loads_arr, kind="stable")
+    heap: List[Tuple[float, int]] = [(0.0, w) for w in range(n_workers)]
     loads = [0.0] * n_workers
     assignments: Dict[int, int] = {}
     for i in order:
-        w = int(np.argmin(loads))
+        load, w = heapq.heappop(heap)
         assignments[int(stream_ids[i])] = w
-        loads[w] += float(stream_loads[i])
+        load += float(loads_arr[i])
+        loads[w] = load
+        heapq.heappush(heap, (load, w))
     return Placement(assignments=assignments, loads=loads,
                      n_workers=n_workers)
 

@@ -61,7 +61,7 @@ from repro.core import batched, federated
 from repro.core.synopsis import Synopsis, kind_params
 from repro.kernels import ops as kops
 from repro.sharding import specs
-from . import api, pipeline, routing
+from . import api, migration, pipeline, routing
 
 # dense route size of pre-hashed-routing snapshots (the old _MAX_STREAMS);
 # restore migrates these into a RouteTable
@@ -531,7 +531,17 @@ class SDE:
                       stream=e.stream_id, federated=e.federated,
                       memory_bytes=per_row[e.kind_key])
             for sid, e in self.entries.items()}
-        return api.Response(request_id=req.request_id, value=info)
+        # elasticity probes ride ``params`` (the JSON status response
+        # surfaces them) so ``value`` keeps its per-synopsis shape — the
+        # gateway's tenant filtering and len(status.value) stay intact
+        return api.Response(
+            request_id=req.request_id, value=info,
+            params=dict(
+                site=self.site,
+                reconcile_count=int(kops.RECONCILE_COUNT[self.site]),
+                migrated_rows=int(kops.MIGRATED_ROWS[self.site]),
+                rebalance_imbalance=float(
+                    kops.REBALANCE_IMBALANCE[self.site])))
 
     # ------------------------------------------------------------------
     # blue path: data
@@ -717,8 +727,146 @@ class SDE:
             for s in self.stacks.values() for x in jax.tree.leaves(s.state))
 
     # ------------------------------------------------------------------
-    # fault tolerance + elasticity
+    # fault tolerance + elasticity (all state movement rides the
+    # migration plane: service/migration.py)
     # ------------------------------------------------------------------
+    def migrate_rows(self, kind: Any, mapping: Dict[int, int]) -> int:
+        """Live intra-stack migration: relocate row ``src`` to
+        ``mapping[src]`` for a whole batch of rows at once — the
+        reconciler's mover for rebalancing across the ``synopsis`` mesh
+        axis (a row's position picks its device shard). Fences the
+        pipeline first (at most the in-flight batches retire), then one
+        on-device gather/scatter plus an atomic routing remap; the probe
+        layout is untouched, so nothing retraces. Returns rows moved."""
+        self.flush()
+        stack = self.stacks[kind]
+        mapping = {int(s): int(d) for s, d in mapping.items()
+                   if int(s) != int(d)}
+        if not mapping:
+            return 0
+        for s in mapping:
+            if not stack.used[s]:
+                raise ValueError(f"migrate_rows: source row {s} is free")
+        migration.move_rows(stack, mapping)
+        for e in self.entries.values():
+            if e.kind_key == kind and e.row in mapping:
+                e.row = mapping[e.row]
+        self._cq_groups = None
+        kops.note_migrated(self.site, len(mapping))
+        return len(mapping)
+
+    def resize_stack(self, kind: Any, new_capacity: int) -> int:
+        """Grow or shrink a kind stack to ``new_capacity`` rows (the
+        reconciler's capacity knob; alloc's doubling keeps working
+        independently). Growth pads with the kind's init prototype;
+        shrink requires every live row below the cut — ``compact``
+        packs them down first. Returns the new capacity."""
+        self.flush()
+        stack = self.stacks[kind]
+        new_capacity = int(new_capacity)
+        if new_capacity < 1:
+            raise ValueError(f"resize_stack: capacity {new_capacity} < 1")
+        if new_capacity == stack.capacity:
+            return stack.capacity
+        if new_capacity > stack.capacity:
+            stack.state = batched.grow(stack.kind, stack.state,
+                                       new_capacity)
+            stack.used.extend([False] * (new_capacity - stack.capacity))
+        else:
+            if any(stack.used[new_capacity:]):
+                raise ValueError(
+                    f"resize_stack: live rows at/above {new_capacity}; "
+                    "compact (migrate them down) first")
+            stack.state = batched.shrink(stack.state, new_capacity)
+            stack.used = stack.used[:new_capacity]
+        stack.capacity = new_capacity
+        stack._free = None
+        stack._source_idx = None
+        stack._place()
+        self._cq_groups = None
+        return stack.capacity
+
+    def compact(self, kind: Any, min_capacity: int = 64) -> int:
+        """Free-list compaction on the migration plane: pack live rows
+        to the low end (ONE ``move_rows`` batch) and shrink capacity to
+        the smallest power of two holding them — the scale-down half of
+        elasticity. Returns the resulting capacity."""
+        stack = self.stacks[kind]
+        live = [r for r, u in enumerate(stack.used) if u]
+        mapping = {r: i for i, r in enumerate(live) if r != i}
+        if mapping:
+            self.migrate_rows(kind, mapping)
+        new_cap = max(min_capacity, _next_pow2(max(len(live), 1)))
+        if new_cap < stack.capacity:
+            self.resize_stack(kind, new_cap)
+        return stack.capacity
+
+    def extract_synopses(self, synopsis_ids: Sequence[str], *,
+                         remove: bool = True) -> List[tuple]:
+        """Package synopses for a cross-engine move: one
+        ``(kind, entry_metas, RowPayload)`` per kind touched — host
+        payloads that implant into any engine on any device or site.
+        With ``remove=True`` (a true migration) the rows are freed here
+        once extracted: state re-initialized, routes dropped, entries
+        gone."""
+        self.flush()
+        by_kind: Dict[Any, List[_Entry]] = {}
+        for sid in synopsis_ids:
+            e = self.entries[sid]
+            by_kind.setdefault(e.kind_key, []).append(e)
+        package = []
+        for kind, es in by_kind.items():
+            payload = migration.extract_rows(
+                self.stacks[kind], [e.row for e in es])
+            metas = [dict(synopsis_id=e.synopsis_id,
+                          stream_id=e.stream_id, federated=e.federated,
+                          responsible_site=e.responsible_site,
+                          continuous=e.continuous, source_id=e.source_id)
+                     for e in es]
+            package.append((kind, metas, payload))
+        if remove:
+            for kind, metas, _ in package:
+                rows = [self.entries[m["synopsis_id"]].row for m in metas]
+                for m in metas:
+                    del self.entries[m["synopsis_id"]]
+                self.stacks[kind].free_rows(rows)
+                if not any(e.kind_key == kind
+                           for e in self.entries.values()):
+                    del self.stacks[kind]
+                    kops.evict_kind_caches(kind)
+            self._cq_groups = None
+        return package
+
+    def implant_synopses(self, package: Sequence[tuple]) -> int:
+        """Absorb ``extract_synopses`` output: per kind, allocate rows,
+        scatter the payload in (one dispatch per state leaf) and commit
+        its routing keys with one table insert. The receiving half of a
+        cross-site migration; returns synopses implanted."""
+        self.flush()
+        # validate BEFORE any allocation: a failed implant must not
+        # commit partial state (same contract as _build)
+        for _, metas, _ in package:
+            for m in metas:
+                if m["synopsis_id"] in self.entries:
+                    raise ValueError(
+                        f"implant_synopses: {m['synopsis_id']!r} already "
+                        "lives here (matched ids merge via merge_from)")
+        n = 0
+        for kind, metas, payload in package:
+            if kind not in self.stacks:
+                self.stacks[kind] = self._new_stack(
+                    kind, max(64, _next_pow2(len(metas))))
+            stack = self.stacks[kind]
+            rows = [stack.alloc() for _ in metas]
+            migration.implant_rows(stack, rows, payload)
+            for m, row in zip(metas, rows):
+                self.entries[m["synopsis_id"]] = _Entry(
+                    kind_key=kind, row=row, **m)
+            n += len(metas)
+            kops.note_migrated(self.site, len(metas))
+        self._cq_groups = None
+        return n
+
     def snapshot(self, directory: str, step: int = 0) -> None:
         """Atomic engine checkpoint (state + routing + registry). The
         routing table ships as its uint32 (keys_lo, keys_hi) halves plus
@@ -735,11 +883,9 @@ class SDE:
         arrays = {}
         for i, k in enumerate(kinds):
             stack = self.stacks[k]
-            lo, hi = routing.split64(stack.table.keys)
             arrays[f"stack{i}"] = dict(
                 state=stack.state,
-                route=dict(keys_lo=lo, keys_hi=hi,
-                           rows=stack.table.rows))
+                route=migration.export_route(stack.table))
         manifest = dict(
             site=self.site, backend=self.backend,
             tuples_ingested=self.tuples_ingested,
@@ -794,10 +940,7 @@ class SDE:
             eng.stacks[kind] = stack
             kinds.append(kind)
             if "table" in sk:
-                size = sk["table"]["size"]
-                route_like = dict(keys_lo=np.zeros(size, np.uint32),
-                                  keys_hi=np.zeros(size, np.uint32),
-                                  rows=np.zeros(size, np.int32))
+                route_like = migration.route_like(sk["table"]["size"])
             else:
                 # pre-hashed-routing snapshot: one dense int32 route array
                 route_like = np.zeros(_LEGACY_ROUTE_SLOTS, np.int32)
@@ -809,15 +952,7 @@ class SDE:
             r = arrays[f"stack{i}"]["route"]
             sk = man["stacks"][i]
             if isinstance(r, dict):
-                lo = np.asarray(r["keys_lo"], np.uint32)
-                hi = np.asarray(r["keys_hi"], np.uint32)
-                table = routing.RouteTable(sk["table"]["size"])
-                table.keys = (lo.astype(np.int64)
-                              | (hi.astype(np.int64) << np.int64(32)))
-                table.rows = np.asarray(r["rows"], np.int32)
-                table.count = sk["table"]["count"]
-                table.max_probe = sk["table"]["max_probe"]
-                table.version += 1
+                table = migration.import_route(r, sk["table"])
             else:
                 # migrate the legacy dense route into a hash table
                 dense = np.asarray(r, np.int32)
@@ -838,7 +973,9 @@ class SDE:
     def merge_from(self, other: "SDE") -> None:
         """Elastic scale-down: absorb another engine's synopses.
         Matching synopsis ids merge (mergeability) — vectorized into ONE
-        row-wise merge dispatch per kind; new ids transfer row by row."""
+        row-wise merge dispatch per kind; new ids ride the migration
+        plane (one extract+implant payload per kind, routing keys
+        carried alongside the state — no per-row copies)."""
         # fence BOTH engines: this engine's stacks are about to mutate,
         # and the absorbed engine's pending responses must surface on its
         # own log before its state is read (state_of fences `other` too)
@@ -868,33 +1005,16 @@ class SDE:
                 rows_a.append(e.row)
                 rows_b.append(oe.row)
             else:
-                transfers.append((sid, oe))
+                transfers.append(sid)
         for kind, (rows_a, rows_b) in matches.items():
             stack = self.stacks[kind]
             stack.state = federated.merge_rows(
                 kind, stack.state, jnp.asarray(rows_a, jnp.int32),
                 pull(other.stacks[kind].state),
                 jnp.asarray(rows_b, jnp.int32))
-        routed_by_kind: Dict[Any, List[tuple]] = {}
-        for sid, oe in transfers:
-            kind = oe.kind_key
-            if kind not in self.stacks:
-                self.stacks[kind] = self._new_stack(kind, 64)
-            stack = self.stacks[kind]
-            row = stack.alloc()
-            stack.state = batched.set_row(stack.state, row,
-                                          pull(other.state_of(sid)))
-            if oe.stream_id is None:
-                stack.mark_source(row)
-            else:
-                routed_by_kind.setdefault(kind, []).append(
-                    (int(oe.stream_id), row))
-            self.entries[sid] = dataclasses.replace(oe, row=row)
-        for kind, pairs in routed_by_kind.items():
-            # one vectorized table insert per kind, not one per synopsis
-            self.stacks[kind].table.insert_many(
-                np.asarray([s for s, _ in pairs], np.int64),
-                np.asarray([r for _, r in pairs], np.int32))
+        if transfers:
+            self.implant_synopses(
+                other.extract_synopses(transfers, remove=False))
         self.tuples_ingested += other.tuples_ingested
         self.batches_ingested += other.batches_ingested
         self._cq_groups = None

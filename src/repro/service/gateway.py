@@ -145,9 +145,16 @@ class SynopsisGateway:
     def __init__(self, sde: Optional[SDE] = None, *,
                  tick_interval: float = 0.001, max_in_flight: int = 8,
                  client_log_cap: Optional[int] = 1024,
-                 tag: str = "gateway"):
+                 tag: str = "gateway", reconciler=None):
         self.sde = sde if sde is not None else SDE()
         self.tag = tag
+        # optional elasticity loop (service/reconciler.py): rides the
+        # micro-batcher tick — after each tick's coalesced dispatches,
+        # ``maybe_step`` reconciles placement when its interval elapsed.
+        # A reconcile failure must never take down serving; the last
+        # error is kept for inspection instead.
+        self.reconciler = reconciler
+        self.reconcile_error: Optional[str] = None
         self.tick_interval = tick_interval
         self.max_in_flight = max_in_flight
         self.client_log_cap = client_log_cap
@@ -258,6 +265,7 @@ class SynopsisGateway:
             # still route: a pipelined engine may have retired batches
             # (and emitted continuous output) since the last tick
             self._route_continuous()
+            self._maybe_reconcile()
             return 0
         self.ticks += 1
         self.requests += len(batch)
@@ -284,7 +292,16 @@ class SynopsisGateway:
             else:
                 self._do_one(items[0])
         self._route_continuous()
+        self._maybe_reconcile()
         return len(batch)
+
+    def _maybe_reconcile(self) -> None:
+        if self.reconciler is None or self.closed:
+            return
+        try:
+            self.reconciler.maybe_step()
+        except Exception as e:  # noqa: BLE001 - serving must survive
+            self.reconcile_error = repr(e)
 
     @staticmethod
     def _class_of(req: Dict[str, Any]) -> str:

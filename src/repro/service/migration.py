@@ -1,0 +1,216 @@
+"""The row-granular migration plane: ONE way to move synopsis state.
+
+Before this module, state movement was split across three disjoint,
+mutually inconsistent paths — ``SDE.snapshot/restore`` (full-state host
+round trip), ``merge_from`` (per-row host pulls) and ``batched.grow``
+(pad-only, never shrink). Elastic placement (paper Section 7) needs to
+move *rows* — between stack slots, devices and federation sites — while
+ingest keeps running, so every mover now rides the same three
+primitives:
+
+  * :func:`extract_rows` — pull a set of rows out of a kind stack as a
+    :class:`RowPayload`: host-numpy state slices PLUS the routing-table
+    keys that pointed at them, shipped as uint32 (lo, hi) halves exactly
+    like the device mirror and the snapshot wire format. A payload is
+    self-contained: it can be implanted into any stack of the same kind
+    on any device, mesh or site.
+  * :func:`implant_rows` — scatter a payload into target rows (one
+    ``.at[].set`` per state leaf), re-pin the stack's sharding, and
+    commit every carried key with ONE vectorized table insert.
+  * :func:`move_rows` — intra-stack relocation: gather the moving rows,
+    re-init the vacated slots, scatter into the targets (all on device —
+    no host round trip), then :meth:`RouteTable.remap_rows` rewrites the
+    row targets in place. Keys never move slots, so ``max_probe`` — and
+    therefore the fused programs' trace — is untouched; the single
+    version bump republishes the device mirror atomically.
+
+Fencing is the CALLER's contract (``SDE.migrate_rows`` etc. flush the
+ingest pipeline first): by the time a plane primitive touches state, at
+most the pipeline-depth in-flight batches have retired and nothing else
+is dispatched until the move commits.
+
+The snapshot wire helpers :func:`export_route` / :func:`import_route`
+live here too, so ``SDE.snapshot``/``restore`` serialize routing through
+the same uint32-halves convention as payloads instead of a bespoke copy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import batched
+from . import routing
+
+# uint32 halves of routing.EMPTY (-1): the hi half alone marks "this row
+# carries no routed key" (valid ids have hi <= 0x7FFFFFFF), matching how
+# the device probe detects empty slots.
+_EMPTY_HI = np.uint32(0xFFFFFFFF)
+
+
+@dataclasses.dataclass
+class RowPayload:
+    """A self-contained slice of a kind stack: ``n`` rows of state plus
+    the routing keys and source flags that travel with them. State
+    leaves are HOST numpy (committed nowhere), so a payload crosses
+    devices, meshes and federation sites freely."""
+
+    state: Any                # pytree of [n, ...] numpy leaves
+    keys_lo: np.ndarray       # [n] uint32 — routed stream id, lo half
+    keys_hi: np.ndarray       # [n] uint32 — hi half; 0xFFFFFFFF = no key
+    source: np.ndarray        # [n] bool — row is a data-source synopsis
+
+    @property
+    def n(self) -> int:
+        return int(self.keys_lo.shape[0])
+
+    def stream_ids(self) -> np.ndarray:
+        """int64 stream ids; -1 (routing.EMPTY) where a row carries no
+        routed key."""
+        return (self.keys_lo.astype(np.int64)
+                | (self.keys_hi.astype(np.int64) << np.int64(32)))
+
+    def nbytes(self) -> int:
+        """Payload wire size — what a cross-site move actually ships."""
+        return (sum(x.nbytes for x in jax.tree.leaves(self.state))
+                + self.keys_lo.nbytes + self.keys_hi.nbytes
+                + self.source.nbytes)
+
+
+def _row_keys(stack, rows: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """(lo, hi) uint32 key halves for ``rows`` of ``stack``'s table;
+    EMPTY halves where no key routes to the row (source/anonymous)."""
+    keys = np.full(rows.shape, routing.EMPTY, np.int64)
+    t_keys, t_rows = stack.table.items()
+    if t_keys.size:
+        top = int(max(int(rows.max(initial=0)), int(t_rows.max())))
+        row_to_key = np.full(top + 1, routing.EMPTY, np.int64)
+        row_to_key[t_rows] = t_keys
+        keys = row_to_key[rows]
+    return routing.split64(keys)
+
+
+def extract_rows(stack, rows: Sequence[int]) -> RowPayload:
+    """Pull ``rows`` out of ``stack`` as a :class:`RowPayload`. One
+    device gather per state leaf, then a host pull; the row->key reverse
+    map is a single vectorized pass over the table. Rows stay live in
+    the stack — removal is the caller's call (``SDE.extract_synopses``
+    frees them when asked to)."""
+    rows = np.asarray(list(rows), np.int32)
+    idx = jnp.asarray(rows)
+    state = jax.tree.map(lambda x: np.asarray(x[idx]), stack.state)
+    lo, hi = _row_keys(stack, rows)
+    source = np.asarray([int(r) in stack.source_rows for r in rows], bool)
+    return RowPayload(state=state, keys_lo=lo, keys_hi=hi, source=source)
+
+
+def implant_rows(stack, rows: Sequence[int], payload: RowPayload) -> None:
+    """Scatter ``payload`` into ``rows`` of ``stack``: one ``.at[].set``
+    per state leaf, re-pinned to the stack's placement, then ONE
+    vectorized table insert commits every carried key (the routing
+    commit point — before it, ingest still routes to the old location;
+    after it, to the new). Target rows must already be allocated
+    (``used``) by the caller."""
+    rows = np.asarray(list(rows), np.int32)
+    if rows.size != payload.n:
+        raise ValueError(
+            f"implant_rows: {rows.size} target rows for a payload of "
+            f"{payload.n} rows")
+    if rows.size == 0:
+        return
+    if int(rows.max()) >= stack.capacity:
+        raise ValueError(
+            f"implant_rows: target row {int(rows.max())} outside stack "
+            f"capacity {stack.capacity}")
+    idx = jnp.asarray(rows)
+    vals = jax.tree.map(jnp.asarray, payload.state)
+    stack.state = jax.tree.map(
+        lambda x, v: x.at[idx].set(v), stack.state, vals)
+    stack._place()
+    for r in rows:
+        stack.used[int(r)] = True
+    stack._free = None
+    for r in rows[payload.source]:
+        if int(r) not in stack.source_rows:
+            stack.mark_source(int(r))
+    routed = payload.keys_hi != _EMPTY_HI
+    if routed.any():
+        stack.table.insert_many(payload.stream_ids()[routed], rows[routed])
+
+
+def move_rows(stack, mapping: Dict[int, int]) -> None:
+    """Intra-stack relocation: move row ``src`` to ``mapping[src]`` for
+    every pair at once, entirely on device — gather the movers, re-init
+    the vacated slots, scatter into the targets (that order makes
+    arbitrary permutations and chains safe), then remap the routing
+    table's row targets in one atomic pass. Targets must be free rows or
+    themselves sources of the same mapping; the mapping must be
+    injective."""
+    if not mapping:
+        return
+    src = np.asarray(list(mapping.keys()), np.int32)
+    dst = np.asarray(list(mapping.values()), np.int32)
+    if len(set(mapping.values())) != dst.size:
+        raise ValueError("move_rows: mapping targets collide")
+    srcset = set(int(s) for s in src)
+    for d in dst:
+        if stack.used[int(d)] and int(d) not in srcset:
+            raise ValueError(
+                f"move_rows: target row {int(d)} is occupied and not "
+                "itself moving")
+    src_d, dst_d = jnp.asarray(src), jnp.asarray(dst)
+    moved = jax.tree.map(lambda x: x[src_d], stack.state)
+    fresh = batched.stacked_init(stack.kind, src.size)
+    stack.state = jax.tree.map(
+        lambda x, f, m: x.at[src_d].set(f).at[dst_d].set(m),
+        stack.state, fresh, moved)
+    stack._place()
+    for s in src:
+        stack.used[int(s)] = False
+    for d in dst:
+        stack.used[int(d)] = True
+    stack.source_rows = [mapping.get(r, r) for r in stack.source_rows]
+    stack._source_idx = None
+    stack._free = None
+    stack.table.remap_rows(src, dst)
+
+
+# ---------------------------------------------------------------------------
+# snapshot wire format for routing tables (uint32 halves — the same
+# convention payload keys use). snapshot/restore call these instead of
+# keeping their own split/join copies.
+# ---------------------------------------------------------------------------
+def export_route(table: routing.RouteTable) -> Dict[str, np.ndarray]:
+    """Routing table -> checkpoint arrays. Keys ship as uint32 (lo, hi)
+    halves plus the int32 rows array — byte-identical probe layout on
+    import, independent of the restoring host's device count."""
+    lo, hi = routing.split64(table.keys)
+    return dict(keys_lo=lo, keys_hi=hi, rows=table.rows)
+
+
+def import_route(arrays: Dict[str, np.ndarray],
+                 meta: Dict[str, int]) -> routing.RouteTable:
+    """Checkpoint arrays + manifest meta -> a RouteTable with the EXACT
+    slot layout the exporter had (restore must not re-insert: probe
+    chains that wrapped the table would land elsewhere and break the
+    byte-equality contract)."""
+    table = routing.RouteTable(meta["size"])
+    lo = np.asarray(arrays["keys_lo"], np.uint32)
+    hi = np.asarray(arrays["keys_hi"], np.uint32)
+    table.keys = (lo.astype(np.int64) | (hi.astype(np.int64) << np.int64(32)))
+    table.rows = np.asarray(arrays["rows"], np.int32)
+    table.count = meta["count"]
+    table.max_probe = meta["max_probe"]
+    table.version += 1
+    return table
+
+
+def route_like(size: int) -> Dict[str, np.ndarray]:
+    """Zero-filled arrays shaped like :func:`export_route` output — the
+    restore-side structure template for the checkpoint reader."""
+    return dict(keys_lo=np.zeros(size, np.uint32),
+                keys_hi=np.zeros(size, np.uint32),
+                rows=np.zeros(size, np.int32))

@@ -159,6 +159,28 @@ class RouteTable:
         self._insert_rounds(sids, rows)
         self.version += 1
 
+    def remap_rows(self, old_rows: np.ndarray, new_rows: np.ndarray) -> None:
+        """Atomically rewrite row targets: every key routed to
+        ``old_rows[i]`` now routes to ``new_rows[i]``. Keys never move —
+        slot layout, ``count`` and ``max_probe`` are untouched, so the
+        fused probe programs need no retrace — and the single version
+        bump republishes the device mirror in one step (the migration
+        plane's routing commit: a reader sees the old mapping or the new
+        one, never a half-moved table)."""
+        old = np.asarray(old_rows, np.int32)
+        new = np.asarray(new_rows, np.int32)
+        if old.shape != new.shape:
+            raise ValueError(
+                f"remap_rows: {old.size} old rows vs {new.size} new rows")
+        if old.size == 0:
+            return
+        top = int(max(old.max(), new.max(), self.rows.max(initial=0)))
+        rowmap = np.arange(top + 1, dtype=np.int32)
+        rowmap[old] = new
+        occ = self.rows >= 0
+        self.rows[occ] = rowmap[self.rows[occ]]
+        self.version += 1
+
     def remove_rows(self, dead_rows: np.ndarray) -> None:
         """Drop every key routed to ``dead_rows`` and compact by full
         re-insert (tombstone-free: stop is the rare path, and rebuilding
