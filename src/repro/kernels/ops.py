@@ -222,6 +222,32 @@ def note_reconcile(tag: str, imbalance: float) -> None:
     REBALANCE_IMBALANCE[tag] = float(imbalance)
 
 
+# Durability probes: the checkpoint path (SDE.snapshot) and the
+# write-ahead ingest log (service/wal.py) report what persistence ships.
+# ``CHECKPOINT_BYTES`` accumulates bytes handed to ``checkpoint.save``
+# per engine site — benchmarks diff it around one save to compare a
+# dirty-row delta against a full snapshot (the fig12 byte gate).
+# ``DIRTY_ROWS`` gauges the row count the LATEST snapshot shipped (full:
+# every capacity row; delta: only rows touched since the previous
+# snapshot). ``WAL_APPENDS`` counts records appended to the write-ahead
+# log per tag. All three surface through ``SDE._status``.
+CHECKPOINT_BYTES: collections.Counter = collections.Counter()
+DIRTY_ROWS: collections.Counter = collections.Counter()
+WAL_APPENDS: collections.Counter = collections.Counter()
+
+
+def note_checkpoint(site: str, n_bytes: int, n_rows: int) -> None:
+    """Record one snapshot: bytes shipped (cumulative) and rows shipped
+    (latest-snapshot gauge)."""
+    CHECKPOINT_BYTES[site] += int(n_bytes)
+    DIRTY_ROWS[site] = int(n_rows)
+
+
+def note_wal_append(tag: str, n: int = 1) -> None:
+    """Record ``n`` records appended to a write-ahead log."""
+    WAL_APPENDS[tag] += n
+
+
 _KIND_CACHES: list["KindCache"] = []
 
 

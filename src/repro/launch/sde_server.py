@@ -50,7 +50,8 @@ def _drain_continuous(sde: SDE, out: IO[str]) -> int:
 
 
 def serve_lines(lines: Iterable[str], sde: Optional[SDE] = None, *,
-                out: IO[str] = sys.stdout, reconciler=None) -> int:
+                out: IO[str] = sys.stdout, reconciler=None,
+                wal=None, checkpointer=None) -> int:
     """Drive ``sde`` (or a fresh eager/env-default engine) with
     JSON-lines requests; write one response line per request plus the
     continuous responses retired so far. Construct the SDE yourself to
@@ -58,8 +59,10 @@ def serve_lines(lines: Iterable[str], sde: Optional[SDE] = None, *,
     acking a successful ``shutdown`` (the engine has already flushed and
     closed); plain EOF gets the same final flush. A ``reconciler``
     rides the request loop (``maybe_step`` after each request — its
-    interval does the throttling). Returns the number of requests
-    handled."""
+    interval does the throttling); a ``wal`` (service/wal.py) records
+    every state-mutating request durably BEFORE it applies (fsync before
+    the ack line is written), and a ``checkpointer`` snapshots every N
+    ingested batches. Returns the number of requests handled."""
     if sde is None:
         sde = SDE()
     n_requests = 0
@@ -71,13 +74,32 @@ def serve_lines(lines: Iterable[str], sde: Optional[SDE] = None, *,
             req = json.loads(line)
         except json.JSONDecodeError:
             req = line               # engine's handler reports the error
+        seq = None
+        if wal is not None and isinstance(req, dict):
+            rtype = req.get("type")
+            if rtype == "ingest":
+                seq = wal.append_ingest(
+                    sde.batches_ingested + 1, req.get("stream_ids", []),
+                    req.get("values", []), req.get("mask"))
+            elif rtype in ("build", "stop", "load"):
+                seq = wal.append_request(req)
+            if seq is not None:
+                wal.sync()           # durable before apply AND ack
         resp = sde.handle(req)
+        if seq is not None:
+            sde.wal_seq = seq
         out.write(resp.to_json() + "\n")
         n_requests += 1
         _drain_continuous(sde, out)
         if resp.ok and isinstance(req, dict) \
                 and req.get("type") == "shutdown":
             return n_requests        # shutdown already flushed + closed
+        if checkpointer is not None:
+            try:
+                checkpointer.maybe_snapshot()
+            except Exception as e:  # noqa: BLE001 - serving must survive
+                print(f"[sde-server] checkpoint error: {e!r}",
+                      file=sys.stderr)
         if reconciler is not None:
             try:
                 reconciler.maybe_step()
@@ -96,17 +118,21 @@ async def serve_socket(sde: Optional[SDE] = None,
                        client_log_cap: Optional[int] = 1024,
                        ready: Optional[asyncio.Future] = None,
                        err: IO[str] = sys.stderr,
-                       reconciler=None) -> SynopsisGateway:
+                       reconciler=None, wal=None,
+                       checkpointer=None) -> SynopsisGateway:
     """Run the multi-client socket server until a client sends a
     successful ``{"type": "shutdown"}``. ``port=0`` binds an ephemeral
     port; the bound port is announced on ``err`` and resolved into
     ``ready`` (when given), so tests can connect without racing. A
-    ``reconciler`` rides the gateway tick. Returns the gateway (engine
-    closed, probes/commit log intact)."""
+    ``reconciler`` rides the gateway tick; so do the durability hooks —
+    ``wal`` (fsynced once per tick, before its acks go out) and
+    ``checkpointer`` (incremental snapshot every N ingested batches).
+    Returns the gateway (engine closed, probes/commit log intact)."""
     gw = SynopsisGateway(sde, tick_interval=tick_interval,
                          max_in_flight=max_in_flight,
                          client_log_cap=client_log_cap,
-                         reconciler=reconciler)
+                         reconciler=reconciler, wal=wal,
+                         checkpointer=checkpointer)
     await gw.start()
     conn_seq = itertools.count()
     writers = set()
@@ -235,8 +261,44 @@ def main(argv=None):
     ap.add_argument("--reconcile-workers", type=int, default=None,
                     help="worker-slice count for placement (default: the "
                          "synopsis mesh axis size)")
+    ap.add_argument("--wal", default=None, metavar="PATH",
+                    help="write-ahead ingest log: every state-mutating "
+                         "request is durable (fsynced) before its ack")
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="take periodic engine snapshots into DIR")
+    ap.add_argument("--checkpoint-interval", type=int, default=8,
+                    help="snapshot every N ingested batches (default 8)")
+    ap.add_argument("--checkpoint-keep", type=int, default=3,
+                    help="keep-k snapshot GC (delta bases are protected)")
+    ap.add_argument("--rebase-every", type=int, default=8,
+                    help="fold the delta chain into a fresh full base "
+                         "every N deltas (default 8)")
+    ap.add_argument("--full-snapshots", action="store_true",
+                    help="synchronous full snapshots instead of "
+                         "incremental async deltas (the pre-durability "
+                         "baseline; fig12 measures the difference)")
+    ap.add_argument("--recover", action="store_true",
+                    help="restore the latest snapshot from "
+                         "--checkpoint-dir and replay the --wal tail "
+                         "before serving")
     args = ap.parse_args(argv)
-    sde = SDE(pipelined=args.pipelined, pipeline_depth=args.depth)
+    from repro.service import wal as wal_mod
+    if args.recover:
+        sde = wal_mod.recover(args.checkpoint_dir, args.wal,
+                              pipelined=args.pipelined)
+        print(f"[sde-server] recovered: {sde.batches_ingested} batches, "
+              f"{len(sde.entries)} synopses, wal_seq={sde.wal_seq}",
+              file=sys.stderr, flush=True)
+    else:
+        sde = SDE(pipelined=args.pipelined, pipeline_depth=args.depth)
+    wal = (wal_mod.WriteAheadLog(args.wal, tag=sde.site)
+           if args.wal else None)
+    checkpointer = (wal_mod.Checkpointer(
+        sde, args.checkpoint_dir, interval=args.checkpoint_interval,
+        keep=args.checkpoint_keep, rebase_every=args.rebase_every,
+        incremental=not args.full_snapshots,
+        async_=not args.full_snapshots)
+        if args.checkpoint_dir else None)
     reconciler = None
     if args.reconcile_interval is not None:
         from repro.service.reconciler import Reconciler
@@ -251,19 +313,25 @@ def main(argv=None):
         if args.port is not None:
             gw = asyncio.run(serve_socket(
                 sde, args.host, args.port, tick_interval=args.tick,
-                max_in_flight=args.max_in_flight, reconciler=reconciler))
+                max_in_flight=args.max_in_flight, reconciler=reconciler,
+                wal=wal, checkpointer=checkpointer))
             n = gw.requests
         elif args.input == "-":
-            n = serve_lines(sys.stdin, sde, reconciler=reconciler)
+            n = serve_lines(sys.stdin, sde, reconciler=reconciler,
+                            wal=wal, checkpointer=checkpointer)
         else:
             with open(args.input) as fh:
-                n = serve_lines(fh, sde, reconciler=reconciler)
+                n = serve_lines(fh, sde, reconciler=reconciler,
+                                wal=wal, checkpointer=checkpointer)
         print(f"[sde-server] handled {n} requests; "
               f"{sde.tuples_ingested:,} tuples in {sde.batches_ingested} "
               f"batches; continuous dropped={sde.continuous_out.dropped}",
               file=sys.stderr)
         return n
     finally:
+        if wal is not None:
+            wal.close()
+        sde.wait_for_snapshot()      # join the background save, if any
         sde.close()                  # idempotent after a shutdown request
 
 

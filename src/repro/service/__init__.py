@@ -14,6 +14,7 @@ from .migration import (RowPayload, extract_rows, implant_rows,
 from .pipeline import BoundedResponseLog, IngestPipeline, PendingBatch
 from .planner import Planner, WorkflowSpec
 from .reconciler import Reconciler
+from .wal import WriteAheadLog, Checkpointer, recover, replay
 
 __all__ = ["Request", "Response", "parse_request", "BuildSynopsis",
            "StopSynopsis", "LoadSynopsis", "AdHocQuery", "FederatedQuery",
@@ -23,4 +24,5 @@ __all__ = ["Request", "Response", "parse_request", "BuildSynopsis",
            "SDE", "Federation", "GatewayClient", "SynopsisGateway",
            "replay_log", "RowPayload", "extract_rows", "implant_rows",
            "move_rows", "BoundedResponseLog", "IngestPipeline",
-           "PendingBatch", "Planner", "WorkflowSpec", "Reconciler"]
+           "PendingBatch", "Planner", "WorkflowSpec", "Reconciler",
+           "WriteAheadLog", "Checkpointer", "recover", "replay"]

@@ -67,6 +67,10 @@ from . import api, migration, pipeline, routing
 # restore migrates these into a RouteTable
 _LEGACY_ROUTE_SLOTS = 1 << 16
 
+# fold the parked ingest-window stream ids into per-stack dirty sets every
+# this many batches — bounds _pending_dirty even when nobody snapshots
+_DIRTY_RESOLVE_EVERY = 64
+
 
 @dataclasses.dataclass
 class _Entry:
@@ -107,7 +111,19 @@ class _KindStack:
         self._free: Optional[List[int]] = None   # alloc free list (lazy)
         self._dev_table = None             # device mirror of self.table
         self._dev_table_version = -1
+        # rows whose bytes changed since the last snapshot — what an
+        # incremental checkpoint ships. Bounded by capacity; a superset
+        # is always safe (extra rows ship unchanged bytes), a miss never
+        # is, so every mutation path marks here: alloc/free, the
+        # migration plane (implant/move), merge and the deferred
+        # ingest-window resolver (SDE._resolve_dirty)
+        self.dirty: set[int] = set()
         self._place()
+
+    def mark_dirty(self, rows) -> None:
+        """Record rows whose state bytes (or lifecycle) changed since the
+        last snapshot."""
+        self.dirty.update(int(r) for r in rows)
 
     @property
     def sharding(self) -> Optional[NamedSharding]:
@@ -200,6 +216,9 @@ class _KindStack:
             self._place()
         row = self._free.pop()
         self.used[row] = True
+        # a freshly built synopsis differs from the base snapshot even
+        # before its first tuple (build-without-ingest must still ship)
+        self.dirty.add(row)
         return row
 
     def free(self, row: int):
@@ -220,6 +239,9 @@ class _KindStack:
                 self.source_rows.remove(row)
         self._source_idx = None
         self._free = None
+        # freed rows are re-initialized below — changed bytes the next
+        # delta must carry so a restored engine matches byte-for-byte
+        self.dirty.update(int(r) for r in rows)
         self.table.remove_rows(np.asarray(rows, np.int32))
         idx = jnp.asarray(rows, jnp.int32)
         fresh = batched.stacked_init(self.kind, len(rows))
@@ -278,6 +300,22 @@ class SDE:
         # lazily after any lifecycle change so _emit_continuous issues one
         # stacked-estimate dispatch per kind, not one gather per entry
         self._cq_groups: Optional[Dict[Any, Any]] = None
+        # durability plumbing. Ingest routes ON DEVICE (the probe runs
+        # inside the fused program), so the hot path cannot know which
+        # rows a batch touched; it appends the batch's stream ids here
+        # instead, and _resolve_dirty folds whole windows into per-stack
+        # dirty sets with one vectorized table lookup (deferred dirty
+        # tracking — O(0) device work, O(batch) host append per ingest).
+        self._pending_dirty: List[np.ndarray] = []
+        # incremental-snapshot lineage: the full base step and the delta
+        # steps stacked on it (oldest first), valid for _ckpt_dir
+        self._ckpt_dir: Optional[str] = None
+        self._ckpt_base: Optional[int] = None
+        self._ckpt_chain: List[int] = []
+        # highest write-ahead-log sequence number already folded into
+        # this engine's state — snapshots persist it so recovery replays
+        # only the WAL tail (exactly-once; see service/wal.py)
+        self.wal_seq = 0
 
     def _new_stack(self, kind: Synopsis, capacity: int = 64) -> _KindStack:
         return _KindStack(kind, capacity, mesh=self.mesh, rules=self.rules,
@@ -541,7 +579,10 @@ class SDE:
                 reconcile_count=int(kops.RECONCILE_COUNT[self.site]),
                 migrated_rows=int(kops.MIGRATED_ROWS[self.site]),
                 rebalance_imbalance=float(
-                    kops.REBALANCE_IMBALANCE[self.site])))
+                    kops.REBALANCE_IMBALANCE[self.site]),
+                checkpoint_bytes=int(kops.CHECKPOINT_BYTES[self.site]),
+                dirty_rows=int(kops.DIRTY_ROWS[self.site]),
+                wal_appends=int(kops.WAL_APPENDS[self.site])))
 
     # ------------------------------------------------------------------
     # blue path: data
@@ -583,6 +624,13 @@ class SDE:
         mask = mask & (sid64 >= 0)
         self.tuples_ingested += int(mask.sum())
         self.batches_ingested += 1
+        # deferred dirty tracking: park this batch's surviving ids; the
+        # window resolves to rows in one vectorized lookup per stack
+        # (data-source rows absorb every batch, so an all-unroutable
+        # batch still has to be parked to mark them)
+        self._pending_dirty.append(sid64[mask])
+        if len(self._pending_dirty) >= _DIRTY_RESOLVE_EVERY:
+            self._resolve_dirty()
         batch_id = self.batches_ingested
         lo, hi = routing.split64(sid64)
         sid_lo = jnp.asarray(lo)
@@ -867,29 +915,34 @@ class SDE:
         self._cq_groups = None
         return n
 
-    def snapshot(self, directory: str, step: int = 0) -> None:
-        """Atomic engine checkpoint (state + routing + registry). The
-        routing table ships as its uint32 (keys_lo, keys_hi) halves plus
-        the int32 rows array — byte-identical probe layout on restore,
-        independent of the target device count (the mirror is
-        replicated)."""
+    def _resolve_dirty(self) -> None:
+        """Fold the parked ingest-window stream ids into each stack's
+        dirty set: one vectorized table lookup per stack over the
+        deduped window. Rows that moved or were freed AFTER a parked
+        batch are already dirty (the plane and ``free_rows`` mark both
+        ends), so resolving against the CURRENT table is exact — at
+        worst a superset, never a miss."""
+        if not self._pending_dirty:
+            return
+        sids = np.unique(np.concatenate(self._pending_dirty))
+        self._pending_dirty.clear()
+        for stack in self.stacks.values():
+            rows = stack.table.lookup_many(sids)
+            stack.mark_dirty(rows[rows >= 0])
+            # data-source rows absorb EVERY batch of the window
+            if stack.source_rows:
+                stack.mark_dirty(stack.source_rows)
+
+    def _manifest(self, kinds: List[Any]) -> Dict[str, Any]:
+        """The restore-authoritative engine metadata every snapshot
+        (full or delta) carries: per-stack lifecycle (used/source/table
+        layout), the entry registry and the counters."""
         from repro.core.synopsis import name_of_kind
-        from repro.training import checkpoint as ckpt
-        # fence: every pending continuous batch retires before the
-        # checkpoint — a restore must not resurrect an engine that still
-        # owes responses it can no longer produce
-        self.flush()
-        kinds = list(self.stacks)
-        arrays = {}
-        for i, k in enumerate(kinds):
-            stack = self.stacks[k]
-            arrays[f"stack{i}"] = dict(
-                state=stack.state,
-                route=migration.export_route(stack.table))
-        manifest = dict(
+        return dict(
             site=self.site, backend=self.backend,
             tuples_ingested=self.tuples_ingested,
             batches_ingested=self.batches_ingested,
+            wal_seq=self.wal_seq,
             stacks=[dict(kind=name_of_kind(k),
                          params=_json_params(kind_params(k)),
                          capacity=self.stacks[k].capacity,
@@ -907,29 +960,138 @@ class SDE:
                                source_id=e.source_id)
                      for sid, e in self.entries.items()},
         )
-        ckpt.save(arrays, directory, step, extra_manifest=manifest)
+
+    def snapshot(self, directory: str, step: int = 0, *,
+                 incremental: bool = False, keep: int = 3,
+                 async_: bool = False, rebase_every: int = 8) -> str:
+        """Engine checkpoint (state + routing + registry). The routing
+        table ships as its uint32 (keys_lo, keys_hi) halves plus the
+        int32 rows array — byte-identical probe layout on restore,
+        independent of the target device count (the mirror is
+        replicated).
+
+        ``incremental=True`` ships a **delta**: only the rows dirtied
+        since the previous snapshot into this directory (plus the full —
+        small — route export and manifest), chained onto the last full
+        base via ``base_step``/``delta_chain`` lineage; after
+        ``rebase_every`` deltas the chain folds into a fresh full base.
+        A delta does NOT fence the pipeline — pulling a dirty slice
+        waits only for that stack's dispatched updates, so checkpoint
+        cost is O(rows touched), fully overlapped with pipelined ingest.
+        ``async_=True`` moves the npz write + fsync to a background
+        thread (the save's host copy is still synchronous — state may be
+        mutated immediately after return); a concurrent save into the
+        same directory waits for the previous one instead of racing its
+        GC. Returns ``"full"`` or ``"delta"`` — which mode was taken."""
+        from repro.training import checkpoint as ckpt
+        self._resolve_dirty()
+        chain_ok = (self._ckpt_dir == directory
+                    and self._ckpt_base is not None
+                    and len(self._ckpt_chain) < rebase_every)
+        if not incremental or not chain_ok:
+            return self._snapshot_full(directory, step, keep=keep,
+                                       async_=async_)
+        kinds = list(self.stacks)
+        arrays: Dict[str, Any] = {}
+        n_rows = 0
+        manifest = self._manifest(kinds)
+        manifest.update(snapshot_kind="delta", base_step=self._ckpt_base,
+                        delta_chain=self._ckpt_chain + [step])
+        for i, k in enumerate(kinds):
+            stack = self.stacks[k]
+            # rows past a shrink no longer exist (the restore-side
+            # capacity adjust drops them the same way)
+            rows = np.asarray(
+                sorted(r for r in stack.dirty if r < stack.capacity),
+                np.int32)
+            payload = migration.extract_rows(stack, rows)
+            arrays[f"stack{i}"] = dict(
+                rows=rows, state=payload.state,
+                keys_lo=payload.keys_lo, keys_hi=payload.keys_hi,
+                source=payload.source,
+                route=migration.export_route(stack.table))
+            manifest["stacks"][i]["dirty_rows"] = int(rows.size)
+            n_rows += int(rows.size)
+        ckpt.save(arrays, directory, step, extra_manifest=manifest,
+                  keep=keep, async_=async_)
+        self._ckpt_chain.append(step)
+        for k in kinds:
+            self.stacks[k].dirty.clear()
+        kops.note_checkpoint(self.site, _tree_nbytes(arrays), n_rows)
+        return "delta"
+
+    def _snapshot_full(self, directory: str, step: int, *,
+                       keep: int = 3, async_: bool = False) -> str:
+        from repro.training import checkpoint as ckpt
+        # fence: every pending continuous batch retires before a full
+        # checkpoint — a restore must not resurrect an engine that still
+        # owes responses it can no longer produce (a delta skips this:
+        # its bounded pull syncs only the dirty stacks' device work)
+        self.flush()
+        kinds = list(self.stacks)
+        arrays = {}
+        for i, k in enumerate(kinds):
+            stack = self.stacks[k]
+            arrays[f"stack{i}"] = dict(
+                state=stack.state,
+                route=migration.export_route(stack.table))
+        manifest = self._manifest(kinds)
+        manifest.update(snapshot_kind="full", base_step=None,
+                        delta_chain=[])
+        ckpt.save(arrays, directory, step, extra_manifest=manifest,
+                  keep=keep, async_=async_)
+        self._ckpt_dir = directory
+        self._ckpt_base = step
+        self._ckpt_chain = []
+        n_rows = 0
+        for k in kinds:
+            self.stacks[k].dirty.clear()
+            n_rows += self.stacks[k].capacity
+        kops.note_checkpoint(self.site, _tree_nbytes(arrays), n_rows)
+        return "full"
+
+    def wait_for_snapshot(self) -> None:
+        """Join the in-flight background (``async_=True``) save, if any —
+        the durability barrier a server takes before acking a clean
+        shutdown."""
+        from repro.training import checkpoint as ckpt
+        if self._ckpt_dir is not None:
+            ckpt.wait(self._ckpt_dir)
 
     @classmethod
     def restore(cls, directory: str, step: Optional[int] = None, *,
                 mesh: Optional[Mesh] = None,
-                rules: Optional[specs.MeshRules] = None) -> "SDE":
+                rules: Optional[specs.MeshRules] = None,
+                pipelined: Optional[bool] = None) -> "SDE":
         """Rebuild a running engine from a snapshot (restart path). Pass
         a ``mesh`` to restore onto a (possibly different) device mesh —
-        the elastic repartition path."""
+        the elastic repartition path. A delta snapshot restores its full
+        base first, then replays every chained delta through the
+        migration plane (``implant_rows``), landing byte-identical to a
+        full snapshot of the same moment."""
         import repro.core as core_mod
         from repro.training import checkpoint as ckpt
         # structure: rebuild kinds first, then load arrays into shape
         import json as _json
         import os
+        ckpt.wait(directory)
         step_ = step if step is not None else ckpt.latest_step(directory)
         with open(os.path.join(directory, f"step-{step_:08d}",
                                "manifest.json")) as f:
             man = _json.load(f)
+        if man.get("snapshot_kind") == "delta":
+            eng = cls.restore(directory, int(man["base_step"]), mesh=mesh,
+                              rules=rules, pipelined=pipelined)
+            for s in man["delta_chain"]:
+                eng._apply_delta(directory, int(s))
+            eng._ckpt_chain = [int(s) for s in man["delta_chain"]]
+            return eng
         eng = cls(site=man["site"], backend=man["backend"], mesh=mesh,
-                  rules=rules)
+                  rules=rules, pipelined=pipelined)
         eng.tuples_ingested = man["tuples_ingested"]
         eng.batches_ingested = man.get("batches_ingested",
                                        man["tuples_ingested"])
+        eng.wal_seq = man.get("wal_seq", 0)
         kinds = []
         like = {}
         for i, sk in enumerate(man["stacks"]):
@@ -960,6 +1122,7 @@ class SDE:
                 table = routing.RouteTable()
                 table.insert_many(occ.astype(np.int64), dense[occ])
             stack.table = table
+            stack.dirty.clear()    # alloc-free rebuild; snapshot-clean
             stack._place()
         for sid, e in man["entries"].items():
             eng.entries[sid] = _Entry(
@@ -968,7 +1131,86 @@ class SDE:
                 federated=e["federated"],
                 responsible_site=e["responsible_site"],
                 continuous=e["continuous"], source_id=e["source_id"])
+        eng._ckpt_dir = directory
+        eng._ckpt_base = step_
+        eng._ckpt_chain = []
         return eng
+
+    def _apply_delta(self, directory: str, step: int) -> None:
+        """Replay one delta snapshot onto this engine: adjust each
+        stack's capacity, implant the dirty-row payload through the
+        migration plane, then adopt the manifest's authoritative
+        lifecycle metadata (used/source rows, the EXACT exported routing
+        layout — implant's insert side effects are discarded so probe
+        chains land where the saver had them) and counters. Stacks
+        absent from the delta were stopped before it was taken."""
+        import json as _json
+        import os
+        import repro.core as core_mod
+        from repro.training import checkpoint as ckpt
+        with open(os.path.join(directory, f"step-{step:08d}",
+                               "manifest.json")) as f:
+            man = _json.load(f)
+        kinds = []
+        like = {}
+        for i, sk in enumerate(man["stacks"]):
+            kind = core_mod.make_kind(sk["kind"], **sk["params"])
+            kinds.append(kind)
+            # the template only fixes tree structure + leaf dtypes;
+            # shapes come from the stored blob
+            proto = jax.tree.map(np.asarray, batched.stacked_init(kind, 1))
+            like[f"stack{i}"] = dict(
+                rows=np.zeros(0, np.int32), state=proto,
+                keys_lo=np.zeros(0, np.uint32),
+                keys_hi=np.zeros(0, np.uint32),
+                source=np.zeros(0, bool),
+                route=migration.route_like(sk["table"]["size"]))
+        arrays, _ = ckpt.restore(like, directory, step)
+        for k in list(self.stacks):
+            if k not in kinds:
+                del self.stacks[k]
+                kops.evict_kind_caches(k)
+        for i, (kind, sk) in enumerate(zip(kinds, man["stacks"])):
+            cap = int(sk["capacity"])
+            stack = self.stacks.get(kind)
+            if stack is None:
+                stack = self._new_stack(kind, cap)
+                self.stacks[kind] = stack
+            if cap > stack.capacity:
+                stack.state = batched.grow(kind, stack.state, cap)
+                stack.used.extend([False] * (cap - stack.capacity))
+            elif cap < stack.capacity:
+                stack.state = batched.shrink(stack.state, cap)
+                stack.used = stack.used[:cap]
+            stack.capacity = cap
+            a = arrays[f"stack{i}"]
+            rows = np.asarray(a["rows"], np.int32)
+            migration.implant_rows(stack, rows, migration.RowPayload(
+                state=a["state"],
+                keys_lo=np.asarray(a["keys_lo"], np.uint32),
+                keys_hi=np.asarray(a["keys_hi"], np.uint32),
+                source=np.asarray(a["source"], bool)))
+            stack.used = list(sk["used"])
+            stack.source_rows = list(sk["source_rows"])
+            stack.table = migration.import_route(a["route"], sk["table"])
+            stack.dirty.clear()
+            stack._source_idx = None
+            stack._free = None
+            stack._dev_table = None
+            stack._dev_table_version = -1
+            stack._place()
+        self.entries = {
+            sid: _Entry(synopsis_id=sid, kind_key=kinds[e["kind_index"]],
+                        row=e["row"], stream_id=e["stream_id"],
+                        federated=e["federated"],
+                        responsible_site=e["responsible_site"],
+                        continuous=e["continuous"],
+                        source_id=e["source_id"])
+            for sid, e in man["entries"].items()}
+        self.tuples_ingested = man["tuples_ingested"]
+        self.batches_ingested = man["batches_ingested"]
+        self.wal_seq = man.get("wal_seq", 0)
+        self._cq_groups = None
 
     def merge_from(self, other: "SDE") -> None:
         """Elastic scale-down: absorb another engine's synopses.
@@ -1012,6 +1254,7 @@ class SDE:
                 kind, stack.state, jnp.asarray(rows_a, jnp.int32),
                 pull(other.stacks[kind].state),
                 jnp.asarray(rows_b, jnp.int32))
+            stack.mark_dirty(rows_a)
         if transfers:
             self.implant_synopses(
                 other.extract_synopses(transfers, remove=False))
@@ -1023,6 +1266,11 @@ class SDE:
 def _json_params(params):
     return {k: v for k, v in params.items()
             if isinstance(v, (int, float, str, bool))}
+
+
+def _tree_nbytes(tree) -> int:
+    """Bytes a snapshot's array pytree ships (device or host leaves)."""
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
 
 
 # ---------------------------------------------------------------------------

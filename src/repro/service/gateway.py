@@ -145,9 +145,19 @@ class SynopsisGateway:
     def __init__(self, sde: Optional[SDE] = None, *,
                  tick_interval: float = 0.001, max_in_flight: int = 8,
                  client_log_cap: Optional[int] = 1024,
-                 tag: str = "gateway", reconciler=None):
+                 tag: str = "gateway", reconciler=None,
+                 wal=None, checkpointer=None):
         self.sde = sde if sde is not None else SDE()
         self.tag = tag
+        # durability (service/wal.py): every state-mutating engine call
+        # is appended to ``wal`` BEFORE it applies, and the tick fsyncs
+        # before any of its acks can leave the process (tick is
+        # synchronous; conn handlers resolve futures only after it
+        # returns) — acked implies recoverable. ``checkpointer`` rides
+        # the tick too, taking an incremental snapshot every N batches.
+        self.wal = wal
+        self.checkpointer = checkpointer
+        self.checkpoint_error: Optional[str] = None
         # optional elasticity loop (service/reconciler.py): rides the
         # micro-batcher tick — after each tick's coalesced dispatches,
         # ``maybe_step`` reconciles placement when its interval elapsed.
@@ -291,6 +301,15 @@ class SynopsisGateway:
                 self._do_query(items)
             else:
                 self._do_one(items[0])
+        if self.wal is not None:
+            # durable-before-ack: one fsync per tick covers every
+            # record this tick appended, before its futures are awaited
+            self.wal.sync()
+        if self.checkpointer is not None and not self.closed:
+            try:
+                self.checkpointer.maybe_snapshot()
+            except Exception as e:  # noqa: BLE001 - serving must survive
+                self.checkpoint_error = repr(e)
         self._route_continuous()
         self._maybe_reconcile()
         return len(batch)
@@ -344,6 +363,12 @@ class SynopsisGateway:
         sids = np.concatenate([p[1] for p in parts])
         vals = np.concatenate([p[2] for p in parts])
         mask = np.concatenate([p[3] for p in parts])
+        seq = None
+        if self.wal is not None:
+            # write-ahead: the record (keyed by the batch id the engine
+            # is about to assign) exists before the state changes
+            seq = self.wal.append_ingest(
+                self.sde.batches_ingested + 1, sids, vals, mask)
         try:
             batch_id = self.sde.ingest(sids, vals, mask)
         except Exception as e:  # noqa: BLE001 - service returns errors
@@ -352,6 +377,8 @@ class SynopsisGateway:
                     request_id=str(item.req.get("request_id", "")),
                     ok=False, error=repr(e)))
             return
+        if seq is not None:
+            self.sde.wal_seq = seq
         self.commit_log.append(("ingest", sids, vals, mask))
         kops.note_coalesced("ingest", len(parts))
         for item, part_sids, _, part_mask in parts:
@@ -440,7 +467,15 @@ class SynopsisGateway:
         if item.tenant and isinstance(req.get("synopsis_id"), str):
             req["synopsis_id"] = namespaced(item.tenant,
                                             req["synopsis_id"])
+        seq = None
+        if self.wal is not None and rtype in ("build", "stop", "load"):
+            # write-ahead, post-namespacing — replay sees exactly what
+            # the engine saw (a request that fails live fails on replay
+            # too, changing nothing)
+            seq = self.wal.append_request(req)
         resp = self.sde.handle(req)
+        if seq is not None:
+            self.sde.wal_seq = seq
         if resp.ok and rtype in ("build", "stop", "load"):
             self.commit_log.append(("request", req))
             if rtype == "build" and req.get("continuous"):

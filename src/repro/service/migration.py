@@ -100,8 +100,15 @@ def extract_rows(stack, rows: Sequence[int]) -> RowPayload:
     the stack — removal is the caller's call (``SDE.extract_synopses``
     frees them when asked to)."""
     rows = np.asarray(list(rows), np.int32)
-    idx = jnp.asarray(rows)
-    state = jax.tree.map(lambda x: np.asarray(x[idx]), stack.state)
+    # pad the gather index to a power-of-two bucket (repeating the last
+    # row) so the per-shape XLA gather compiles O(log capacity) times
+    # total instead of once per distinct row count — periodic dirty-row
+    # snapshots would otherwise recompile on every delta
+    n = rows.size
+    pad = max(8, 1 << (n - 1).bit_length()) if n else 0
+    idx = jnp.asarray(np.concatenate(
+        [rows, np.full(pad - n, rows[-1] if n else 0, np.int32)]))
+    state = jax.tree.map(lambda x: np.asarray(x[idx])[:n], stack.state)
     lo, hi = _row_keys(stack, rows)
     source = np.asarray([int(r) in stack.source_rows for r in rows], bool)
     return RowPayload(state=state, keys_lo=lo, keys_hi=hi, source=source)
@@ -130,6 +137,7 @@ def implant_rows(stack, rows: Sequence[int], payload: RowPayload) -> None:
     stack.state = jax.tree.map(
         lambda x, v: x.at[idx].set(v), stack.state, vals)
     stack._place()
+    _mark_dirty(stack, rows)
     for r in rows:
         stack.used[int(r)] = True
     stack._free = None
@@ -176,6 +184,19 @@ def move_rows(stack, mapping: Dict[int, int]) -> None:
     stack._source_idx = None
     stack._free = None
     stack.table.remap_rows(src, dst)
+    # both ends of every move changed bytes (target got the mover, the
+    # vacated source was re-initialized) — the next incremental snapshot
+    # must ship them, or a reconciler rebalance would silently rot deltas
+    _mark_dirty(stack, src)
+    _mark_dirty(stack, dst)
+
+
+def _mark_dirty(stack, rows) -> None:
+    """Record rows the plane touched for incremental checkpointing; a
+    stack without dirty tracking (bare test doubles) is a no-op."""
+    mark = getattr(stack, "mark_dirty", None)
+    if mark is not None:
+        mark(rows)
 
 
 # ---------------------------------------------------------------------------
@@ -201,7 +222,9 @@ def import_route(arrays: Dict[str, np.ndarray],
     lo = np.asarray(arrays["keys_lo"], np.uint32)
     hi = np.asarray(arrays["keys_hi"], np.uint32)
     table.keys = (lo.astype(np.int64) | (hi.astype(np.int64) << np.int64(32)))
-    table.rows = np.asarray(arrays["rows"], np.int32)
+    # force a writable copy: checkpoint arrays can arrive as read-only
+    # views of device buffers, and insert_many mutates rows in place
+    table.rows = np.array(arrays["rows"], np.int32)
     table.count = meta["count"]
     table.max_probe = meta["max_probe"]
     table.version += 1

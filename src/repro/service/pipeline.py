@@ -104,6 +104,13 @@ class IngestPipeline:
     def in_flight(self) -> int:
         return len(self._queue)
 
+    @property
+    def in_flight_ids(self) -> List[int]:
+        """Batch ids still pending materialization, oldest first — the
+        durability layer reads this to know which acked batches a crash
+        right now would owe to WAL replay."""
+        return [p.batch_id for p in self._queue]
+
     def submit(self, pending: PendingBatch) -> None:
         """Enqueue one batch's deferred emission; retires the oldest
         batch(es) beyond the depth bound so at most ``depth`` batches

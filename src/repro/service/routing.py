@@ -118,6 +118,29 @@ class RouteTable:
             slot = (slot + 1) & mask
         return -1
 
+    def lookup_many(self, sids: np.ndarray) -> np.ndarray:
+        """Vectorized ``lookup``: int32 rows, -1 where a key is absent —
+        the same probe rounds as ``_contains_many``, returning the row
+        instead of a membership bit. The dirty-tracking resolver runs a
+        whole ingest window of stream ids through this in a handful of
+        numpy passes."""
+        sids = np.asarray(sids, np.int64).ravel()
+        out = np.full(sids.shape, -1, np.int32)
+        if sids.size == 0 or self.count == 0:
+            return out
+        slot = slot_hash(*split64(sids), self.size)
+        mask = self.size - 1
+        active = np.ones(sids.shape, bool)
+        for _ in range(self.max_probe):
+            k = self.keys[slot]
+            hit = active & (k == sids)
+            out[hit] = self.rows[slot[hit]]
+            active &= ~hit & (k != EMPTY)
+            if not active.any():
+                break
+            slot = (slot + 1) & mask
+        return out
+
     def items(self) -> Tuple[np.ndarray, np.ndarray]:
         """(stream_ids, rows) of every occupied slot."""
         occ = self.keys != EMPTY

@@ -1,0 +1,218 @@
+"""Write-ahead ingest log + crash recovery for the serving layer.
+
+The engine's snapshots (``SDE.snapshot``, incremental or full) bound
+recovery work to the last checkpoint; this module covers the tail —
+everything acked AFTER it. The serving front ends
+(``launch/sde_server.py`` JSON-lines mode and the
+``SynopsisGateway`` micro-batcher) append every state-mutating engine
+call here BEFORE applying it, and fsync before the ack leaves the
+process, so the durability contract is::
+
+    acked  =>  in the WAL  =>  recoverable
+
+Recovery (:func:`recover`) = restore the latest snapshot + replay the
+WAL tail through the NORMAL ingest/request path. Exactly-once holds by
+two independent watermarks, both persisted in every snapshot manifest:
+
+  * ``seq``   — every WAL record carries a monotonic sequence number;
+    replay skips records with ``seq <= sde.wal_seq`` (also what makes
+    replay idempotent under duplicate or overlapping tails).
+  * ``batch`` — ingest records additionally carry the monotonic engine
+    batch id they became; replay skips batches
+    ``<= sde.batches_ingested`` (belt-and-braces for snapshots taken by
+    other writers into the same lineage).
+
+Records are JSON lines (one fsync per serving tick, not per record); a
+torn FINAL line — the signature of a crash mid-append — is tolerated
+and dropped, torn interior lines are corruption and raise.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.kernels import ops as kops
+from .engine import SDE
+
+# request types that mutate engine state and therefore must be logged;
+# everything else (queries, status, flush) is read-only or transient
+MUTATING_REQUESTS = ("build", "stop", "load")
+
+
+class WriteAheadLog:
+    """Append-only JSON-lines log of state-mutating engine calls.
+
+    One instance per serving process; ``append_*`` buffers, ``sync``
+    makes everything appended so far durable (flush + fsync — the
+    serving loop calls it once per tick, before acks go out). Reopening
+    an existing log resumes its sequence numbering, so a recovered
+    server appends where the crashed one stopped."""
+
+    def __init__(self, path: str, tag: str = "wal"):
+        self.path = path
+        self.tag = tag
+        self.seq = 0
+        if os.path.exists(path):
+            for rec in read_records(path):
+                self.seq = max(self.seq, int(rec.get("seq", 0)))
+        parent = os.path.dirname(os.path.abspath(path))
+        os.makedirs(parent, exist_ok=True)
+        self._fh = open(path, "a", encoding="utf-8")
+        self._dirty = False
+
+    def append_ingest(self, batch: int, stream_ids, values,
+                      mask=None) -> int:
+        """Log one ingest batch (pre-apply: call this BEFORE
+        ``sde.ingest``). ``batch`` is the monotonic id the engine will
+        assign — the second idempotence watermark."""
+        return self._append(dict(
+            kind="ingest", batch=int(batch),
+            sids=np.asarray(stream_ids, np.int64).ravel().tolist(),
+            vals=np.asarray(values, np.float32).ravel().tolist(),
+            mask=(None if mask is None
+                  else np.asarray(mask, bool).ravel().tolist())))
+
+    def append_request(self, req: Dict[str, Any]) -> int:
+        """Log one lifecycle request (build/stop/load), already
+        namespaced exactly as the engine will see it."""
+        return self._append(dict(kind="req", req=dict(req)))
+
+    def _append(self, rec: Dict[str, Any]) -> int:
+        self.seq += 1
+        rec["seq"] = self.seq
+        self._fh.write(json.dumps(rec) + "\n")
+        self._dirty = True
+        kops.note_wal_append(self.tag)
+        return self.seq
+
+    def sync(self) -> None:
+        """Make every appended record durable (flush + fsync). The
+        serving loop's durable-before-ack point."""
+        if not self._dirty:
+            return
+        self._fh.flush()
+        os.fsync(self._fh.fileno())
+        self._dirty = False
+
+    def close(self) -> None:
+        if self._fh.closed:
+            return
+        self.sync()
+        self._fh.close()
+
+
+def read_records(path: str) -> List[Dict[str, Any]]:
+    """Parse a WAL file. A torn FINAL record (crash mid-append, fsync
+    never completed — the ack for it never left either) is dropped; a
+    torn interior record means real corruption and raises."""
+    with open(path, encoding="utf-8") as f:
+        lines = f.read().split("\n")
+    out: List[Dict[str, Any]] = []
+    for i, line in enumerate(lines):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            out.append(json.loads(line))
+        except json.JSONDecodeError:
+            if any(rest.strip() for rest in lines[i + 1:]):
+                raise ValueError(
+                    f"corrupt WAL record at {path}:{i + 1} (not the "
+                    "final line — this is not a torn append)")
+            break                        # torn tail: never acked, drop
+    return out
+
+
+def replay(sde: SDE, path: str) -> int:
+    """Replay a WAL tail through the engine's normal paths. Skips
+    records already folded into ``sde`` (``seq <= sde.wal_seq``; ingest
+    batches ``<= sde.batches_ingested``), so replay is idempotent under
+    duplicate/overlapping tails and exactly-once on top of any snapshot
+    of the same lineage. Returns the number of records applied."""
+    if not os.path.exists(path):
+        return 0
+    n = 0
+    for rec in read_records(path):
+        seq = int(rec.get("seq", 0))
+        if seq <= sde.wal_seq:
+            continue
+        if rec.get("kind") == "ingest":
+            batch = rec.get("batch")
+            if batch is not None and int(batch) <= sde.batches_ingested:
+                sde.wal_seq = seq        # snapshot already folded it
+                continue
+            sde.ingest(np.asarray(rec["sids"], np.int64),
+                       np.asarray(rec["vals"], np.float32),
+                       None if rec.get("mask") is None
+                       else np.asarray(rec["mask"], bool))
+        else:
+            # lifecycle requests re-execute verbatim; a request that
+            # failed live fails identically here (no state change)
+            sde.handle(rec["req"])
+        sde.wal_seq = seq
+        n += 1
+    return n
+
+
+class Checkpointer:
+    """Periodic off-hot-path snapshots, paced by ingest batches: call
+    ``maybe_snapshot()`` once per serving tick and every ``interval``
+    ingested batches it takes one ``SDE.snapshot`` — incremental (a
+    dirty-row delta chained on the last full base, rebasing every
+    ``rebase_every`` deltas) and asynchronous (background npz write) by
+    default. Steps continue from whatever the directory already holds,
+    so a recovered server extends the existing lineage."""
+
+    def __init__(self, sde: SDE, directory: str, *, interval: int = 8,
+                 keep: int = 3, rebase_every: int = 8,
+                 incremental: bool = True, async_: bool = True):
+        from repro.training import checkpoint as ckpt
+        self.sde = sde
+        self.directory = directory
+        self.interval = max(1, int(interval))
+        self.keep = keep
+        self.rebase_every = rebase_every
+        self.incremental = incremental
+        self.async_ = async_
+        last = ckpt.latest_step(directory)
+        self.next_step = 0 if last is None else last + 1
+        self._last_batches = sde.batches_ingested
+        self.snapshots = 0
+
+    def maybe_snapshot(self) -> Optional[str]:
+        """Snapshot iff ``interval`` batches landed since the last one.
+        Returns the mode taken ("full"/"delta") or None."""
+        if self.sde.batches_ingested - self._last_batches < self.interval:
+            return None
+        return self.snapshot()
+
+    def snapshot(self) -> str:
+        mode = self.sde.snapshot(
+            self.directory, self.next_step,
+            incremental=self.incremental, keep=self.keep,
+            async_=self.async_, rebase_every=self.rebase_every)
+        self.next_step += 1
+        self._last_batches = self.sde.batches_ingested
+        self.snapshots += 1
+        return mode
+
+
+def recover(checkpoint_dir: Optional[str], wal_path: Optional[str], *,
+            pipelined: Optional[bool] = None, mesh=None,
+            rules=None) -> SDE:
+    """The restart path: restore the latest snapshot (a fresh engine
+    when there is none) and replay the WAL tail. The result is
+    byte-identical to the pre-crash engine's acked state."""
+    from repro.training import checkpoint as ckpt
+    if (checkpoint_dir is not None
+            and ckpt.latest_step(checkpoint_dir) is not None):
+        sde = SDE.restore(checkpoint_dir, mesh=mesh, rules=rules,
+                          pipelined=pipelined)
+    else:
+        sde = SDE(mesh=mesh, rules=rules, pipelined=pipelined)
+    if wal_path is not None:
+        replay(sde, wal_path)
+    return sde

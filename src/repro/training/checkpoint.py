@@ -1,17 +1,29 @@
 """Fault-tolerant checkpointing.
 
 Guarantees:
-  * atomic: write to <dir>/tmp-<step>, fsync, rename to <dir>/step-<n>
-    (a crash mid-save never corrupts the latest checkpoint),
-  * keep-k GC of old steps,
-  * async: saves run on a background thread (training never blocks on IO),
+  * atomic: write to <dir>/tmp-<step>-<pid>, fsync, rename to
+    <dir>/step-<n> (a crash mid-save never corrupts the latest
+    checkpoint); stale tmp dirs a crashed process left behind are swept
+    on the next save into the same directory,
+  * keep-k GC of old steps — lineage-aware: a step referenced as the
+    ``base_step`` (or a ``delta_chain`` member) of any kept incremental
+    snapshot is never collected out from under its chain,
+  * async: saves run on a background thread (training never blocks on
+    IO); concurrent saves into the same directory serialize — a new
+    ``save`` joins the previous background write instead of racing its
+    rename/GC,
+  * byte-exact extended dtypes: bf16 leaves are stored as uint16 views
+    with a dtype tag in the manifest and reinterpreted on restore (a
+    float32 widening round trip is NOT byte-stable for NaN payloads),
   * mesh-shape agnostic restore: leaves are stored unsharded; `restore`
     device_puts them under ANY target shardings — this is the elastic
     repartition path (shrink/grow the mesh between runs),
   * exact data-pipeline resume: the pipeline offset rides in the manifest.
 
 The synopsis engine checkpoints through the same API (its state is a
-pytree), so SDE state survives restarts with the job.
+pytree), so SDE state survives restarts with the job — including the
+engine's incremental (dirty-row delta) snapshots, whose manifests carry
+the ``base_step``/``delta_chain`` lineage this module's GC respects.
 """
 from __future__ import annotations
 
@@ -20,10 +32,15 @@ import os
 import shutil
 import threading
 import time
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
+
+# one background save at a time per directory: a second save joins the
+# first instead of racing its tmp-dir rename and GC sweep
+_SAVE_THREADS: Dict[str, threading.Thread] = {}
+_SAVE_LOCK = threading.Lock()
 
 
 def _flatten_with_paths(tree: Any):
@@ -36,30 +53,55 @@ def _flatten_with_paths(tree: Any):
     return out, treedef
 
 
-def _to_numpy(x) -> np.ndarray:
-    """npz-compatible host array (bf16 and friends widen to f32)."""
+def _to_numpy(x) -> tuple[np.ndarray, Optional[str]]:
+    """npz-compatible host array + dtype tag. bf16 ships as a uint16 bit
+    view (tagged ``"bfloat16"`` so restore reinterprets instead of
+    casting — byte-identical round trip, half the bytes of the old f32
+    widening); other extension dtypes still widen to f32."""
     arr = np.asarray(jax.device_get(x))
-    if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+    if str(arr.dtype) == "bfloat16":
+        return arr.view(np.uint16), "bfloat16"
+    if arr.dtype.kind == "V":
         arr = np.asarray(jax.device_get(
             jax.numpy.asarray(x).astype(jax.numpy.float32)))
-    return arr
+    return arr, None
+
+
+def wait(directory: str) -> None:
+    """Join the in-flight background save for ``directory`` (no-op when
+    idle). ``restore``/``latest_step`` call this so a reader never races
+    a half-renamed step."""
+    with _SAVE_LOCK:
+        t = _SAVE_THREADS.get(os.path.abspath(directory))
+    if t is not None and t is not threading.current_thread():
+        t.join()
 
 
 def save(state: Any, directory: str, step: int, *,
          extra_manifest: Optional[Dict] = None, keep: int = 3,
          async_: bool = False) -> threading.Thread | None:
-    """Atomic (optionally async) checkpoint of a pytree."""
-    host_state = jax.tree.map(_to_numpy, state)
+    """Atomic (optionally async) checkpoint of a pytree. The host copy
+    of ``state`` happens synchronously (the caller may mutate/donate the
+    arrays right after this returns); only the npz write, fsync, rename
+    and GC run on the background thread."""
+    wait(directory)                      # serialize with the prior save
+    leaves, _ = _flatten_with_paths(state)
+    host: Dict[str, np.ndarray] = {}
+    tags: Dict[str, str] = {}
+    for k, v in leaves.items():
+        host[k], tag = _to_numpy(v)
+        if tag is not None:
+            tags[k] = tag
 
     def _do():
         os.makedirs(directory, exist_ok=True)
         tmp = os.path.join(directory, f"tmp-{step}-{os.getpid()}")
         os.makedirs(tmp, exist_ok=True)
-        leaves, _ = _flatten_with_paths(host_state)
         np.savez(os.path.join(tmp, "leaves.npz"),
-                 **{k.replace("/", "__"): v for k, v in leaves.items()})
+                 **{k.replace("/", "__"): v for k, v in host.items()})
         manifest = dict(step=step, time=time.time(),
-                        n_leaves=len(leaves), **(extra_manifest or {}))
+                        n_leaves=len(host), leaf_dtypes=tags,
+                        **(extra_manifest or {}))
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
             f.flush()
@@ -72,21 +114,72 @@ def save(state: Any, directory: str, step: int, *,
 
     if async_:
         t = threading.Thread(target=_do, daemon=True)
+        with _SAVE_LOCK:
+            _SAVE_THREADS[os.path.abspath(directory)] = t
         t.start()
         return t
     _do()
     return None
 
 
+def _lineage_refs(directory: str, step_dir: str) -> set:
+    """Step dirs a snapshot manifest references (its delta chain/base):
+    those must survive GC or the chain cannot be restored."""
+    refs: set = set()
+    try:
+        with open(os.path.join(directory, step_dir, "manifest.json")) as f:
+            man = json.load(f)
+    except (OSError, ValueError):
+        return refs
+    base = man.get("base_step")
+    if base is not None:
+        refs.add(f"step-{int(base):08d}")
+    for s in man.get("delta_chain") or []:
+        refs.add(f"step-{int(s):08d}")
+    return refs
+
+
 def _gc(directory: str, keep: int):
     steps = sorted(d for d in os.listdir(directory) if d.startswith("step-"))
-    for d in steps[:-keep]:
-        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+    protected = set(steps[-keep:]) if keep > 0 else set(steps)
+    # lineage closure: an incremental snapshot is only restorable with
+    # its base + every prior delta — protect whatever the kept manifests
+    # reference (chains list every member, so one pass closes the set)
+    for d in list(protected):
+        protected |= _lineage_refs(directory, d)
+    for d in steps:
+        if d not in protected:
+            shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+    # sweep tmp dirs crashed saves left behind: tmp-<step>-<pid> whose
+    # pid is no longer alive can never be renamed into place
+    for d in os.listdir(directory):
+        if not d.startswith("tmp-"):
+            continue
+        pid = d.rsplit("-", 1)[-1]
+        try:
+            alive = pid.isdigit() and _pid_alive(int(pid))
+        except ValueError:
+            alive = False
+        if not alive:
+            shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def _pid_alive(pid: int) -> bool:
+    if pid == os.getpid():
+        return True
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except PermissionError:
+        return True                      # exists, owned by someone else
+    return True
 
 
 def latest_step(directory: str) -> Optional[int]:
     if not os.path.isdir(directory):
         return None
+    wait(directory)
     steps = sorted(d for d in os.listdir(directory) if d.startswith("step-"))
     return int(steps[-1].split("-")[1]) if steps else None
 
@@ -95,6 +188,7 @@ def restore(like: Any, directory: str, step: Optional[int] = None,
             shardings: Any = None) -> tuple[Any, Dict]:
     """Restore into the structure of `like`; device_put under `shardings`
     (None => default placement). Works across mesh shapes (elastic)."""
+    wait(directory)                      # never read a half-written step
     if step is None:
         step = latest_step(directory)
         if step is None:
@@ -102,12 +196,16 @@ def restore(like: Any, directory: str, step: Optional[int] = None,
     path = os.path.join(directory, f"step-{step:08d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
+    tags = manifest.get("leaf_dtypes", {})
     blob = np.load(os.path.join(path, "leaves.npz"))
     keys, treedef = _flatten_with_paths(like)
     like_leaves = list(keys.values())
     leaves = []
     for key, like_leaf in zip(keys, like_leaves):
         arr = blob[key.replace("/", "__")]
+        if tags.get(key) == "bfloat16":
+            # reinterpret the stored uint16 bit pattern — NOT a cast
+            arr = arr.view(jax.numpy.bfloat16.dtype)
         leaves.append(jax.numpy.asarray(arr).astype(like_leaf.dtype))
     state = jax.tree.unflatten(treedef, leaves)
     if shardings is not None:
