@@ -185,8 +185,11 @@ def main():
           f"4 workers, state moved byte-exactly")
 
     # 2f. Durable mode: checkpointing off the hot path. A `WriteAheadLog`
-    #     records every state-mutating call durably BEFORE it applies
-    #     (fsync before the ack), and a `Checkpointer` takes an
+    #     records every state-mutating call durably before its ack
+    #     (lifecycle requests pre-apply; ingest batches after a
+    #     successful apply, keyed by the engine-assigned batch id, so a
+    #     refused batch never lands in the log), and a `Checkpointer`
+    #     takes an
     #     incremental snapshot every `interval` ingested batches — a
     #     dirty-row DELTA chained on the last full base, written by a
     #     background thread, so the steady-state cost is O(rows touched),
@@ -216,9 +219,9 @@ def main():
     for _ in range(10):                  # 2 deltas + a 2-batch WAL tail
         sids = drng.randint(0, 64, 256).astype(np.int64)
         vals = np.ones(256, np.float32)
-        wal.append_ingest(dsde.batches_ingested + 1, sids, vals)
+        batch = dsde.ingest(sids, vals)
+        wal.append_ingest(batch, sids, vals)   # post-apply: acked id
         wal.sync()                       # durable-before-ack point
-        dsde.ingest(sids, vals)
         dsde.wal_seq = wal.seq
         ckp.maybe_snapshot()
     wal.close()

@@ -60,9 +60,11 @@ def serve_lines(lines: Iterable[str], sde: Optional[SDE] = None, *,
     closed); plain EOF gets the same final flush. A ``reconciler``
     rides the request loop (``maybe_step`` after each request — its
     interval does the throttling); a ``wal`` (service/wal.py) records
-    every state-mutating request durably BEFORE it applies (fsync before
-    the ack line is written), and a ``checkpointer`` snapshots every N
-    ingested batches. Returns the number of requests handled."""
+    every state-mutating request durably before its ack line is written
+    (lifecycle requests pre-apply, ingest post-apply keyed by the
+    engine-assigned batch id — a refused ingest never reaches the log),
+    and a ``checkpointer`` snapshots every N ingested batches. Returns
+    the number of requests handled."""
     if sde is None:
         sde = SDE()
     n_requests = 0
@@ -75,17 +77,39 @@ def serve_lines(lines: Iterable[str], sde: Optional[SDE] = None, *,
         except json.JSONDecodeError:
             req = line               # engine's handler reports the error
         seq = None
-        if wal is not None and isinstance(req, dict):
-            rtype = req.get("type")
-            if rtype == "ingest":
-                seq = wal.append_ingest(
-                    sde.batches_ingested + 1, req.get("stream_ids", []),
-                    req.get("values", []), req.get("mask"))
-            elif rtype in ("build", "stop", "load"):
+        rtype = req.get("type") if isinstance(req, dict) else None
+        if wal is not None and rtype in ("build", "stop", "load"):
+            # lifecycle: logged pre-apply (replay re-executes verbatim;
+            # a request that fails live fails identically on replay). A
+            # WAL write error must not kill serving — the request is
+            # refused instead, keeping "acked => in the WAL" intact.
+            try:
                 seq = wal.append_request(req)
-            if seq is not None:
                 wal.sync()           # durable before apply AND ack
+            except Exception as e:  # noqa: BLE001 - serving must survive
+                out.write(api.Response(
+                    request_id=str(req.get("request_id", "")), ok=False,
+                    error=f"WAL append failed: {e!r}").to_json() + "\n")
+                n_requests += 1
+                continue
         resp = sde.handle(req)
+        if wal is not None and rtype == "ingest" and resp.ok:
+            # ingest: logged POST-apply with the batch id the engine
+            # actually assigned — a malformed batch the engine refused
+            # (acked with an error, no batch id) never reaches the log,
+            # so replay cannot be poisoned or consume an acked id
+            try:
+                seq = wal.append_ingest(
+                    resp.value["batch"], req.get("stream_ids", []),
+                    req.get("values", []), req.get("mask"))
+                wal.sync()           # durable before ack
+            except Exception as e:  # noqa: BLE001 - serving must survive
+                # applied but not durable: ack an error so no client
+                # counts on this batch surviving a crash
+                resp = api.Response(
+                    request_id=resp.request_id, ok=False,
+                    error=f"ingested but WAL append failed: {e!r}")
+                seq = None
         if seq is not None:
             sde.wal_seq = seq
         out.write(resp.to_json() + "\n")
@@ -297,7 +321,7 @@ def main(argv=None):
         sde, args.checkpoint_dir, interval=args.checkpoint_interval,
         keep=args.checkpoint_keep, rebase_every=args.rebase_every,
         incremental=not args.full_snapshots,
-        async_=not args.full_snapshots)
+        async_=not args.full_snapshots, wal=wal)
         if args.checkpoint_dir else None)
     reconciler = None
     if args.reconcile_interval is not None:

@@ -312,6 +312,9 @@ class SDE:
         self._ckpt_dir: Optional[str] = None
         self._ckpt_base: Optional[int] = None
         self._ckpt_chain: List[int] = []
+        # background (async_=True) saves that never landed — detected at
+        # the next snapshot, which then rebuilds from a fresh full base
+        self.ckpt_failures = 0
         # highest write-ahead-log sequence number already folded into
         # this engine's state — snapshots persist it so recovery replays
         # only the WAL tail (exactly-once; see service/wal.py)
@@ -985,6 +988,17 @@ class SDE:
         GC. Returns ``"full"`` or ``"delta"`` — which mode was taken."""
         from repro.training import checkpoint as ckpt
         self._resolve_dirty()
+        if ckpt.take_error(directory) is not None:
+            # the previous background save into this directory never
+            # landed (its step is not on disk), so the lineage the chain
+            # bookkeeping recorded is broken and the dirty rows it
+            # cleared were never shipped. Drop the chain and take a
+            # fresh FULL base — it re-ships every row, so nothing the
+            # failed delta covered is lost.
+            self.ckpt_failures += 1
+            if self._ckpt_dir == directory:
+                self._ckpt_base = None
+                self._ckpt_chain = []
         chain_ok = (self._ckpt_dir == directory
                     and self._ckpt_base is not None
                     and len(self._ckpt_chain) < rebase_every)

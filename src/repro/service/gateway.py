@@ -149,8 +149,10 @@ class SynopsisGateway:
                  wal=None, checkpointer=None):
         self.sde = sde if sde is not None else SDE()
         self.tag = tag
-        # durability (service/wal.py): every state-mutating engine call
-        # is appended to ``wal`` BEFORE it applies, and the tick fsyncs
+        # durability (service/wal.py): lifecycle requests are appended
+        # to ``wal`` BEFORE they apply, ingest batches AFTER a
+        # successful apply (keyed by the engine-assigned batch id, so a
+        # refused batch never reaches the log), and the tick fsyncs
         # before any of its acks can leave the process (tick is
         # synchronous; conn handlers resolve futures only after it
         # returns) — acked implies recoverable. ``checkpointer`` rides
@@ -363,12 +365,6 @@ class SynopsisGateway:
         sids = np.concatenate([p[1] for p in parts])
         vals = np.concatenate([p[2] for p in parts])
         mask = np.concatenate([p[3] for p in parts])
-        seq = None
-        if self.wal is not None:
-            # write-ahead: the record (keyed by the batch id the engine
-            # is about to assign) exists before the state changes
-            seq = self.wal.append_ingest(
-                self.sde.batches_ingested + 1, sids, vals, mask)
         try:
             batch_id = self.sde.ingest(sids, vals, mask)
         except Exception as e:  # noqa: BLE001 - service returns errors
@@ -377,8 +373,25 @@ class SynopsisGateway:
                     request_id=str(item.req.get("request_id", "")),
                     ok=False, error=repr(e)))
             return
-        if seq is not None:
-            self.sde.wal_seq = seq
+        if self.wal is not None:
+            # logged POST-apply, keyed by the batch id the engine really
+            # assigned: a batch the engine refuses never reaches the
+            # log, so replay cannot be poisoned or steal an acked id.
+            # Durable-before-ack still holds — the tick fsyncs before
+            # any future's awaiter runs.
+            try:
+                self.sde.wal_seq = self.wal.append_ingest(
+                    batch_id, sids, vals, mask)
+            except Exception as e:  # noqa: BLE001 - serving must survive
+                # applied but not durable: tell the clients so none of
+                # them counts on this batch surviving a crash
+                self.commit_log.append(("ingest", sids, vals, mask))
+                for item, *_ in parts:
+                    item.fut.set_result(api.Response(
+                        request_id=str(item.req.get("request_id", "")),
+                        ok=False,
+                        error=f"ingested but WAL append failed: {e!r}"))
+                return
         self.commit_log.append(("ingest", sids, vals, mask))
         kops.note_coalesced("ingest", len(parts))
         for item, part_sids, _, part_mask in parts:
@@ -471,8 +484,15 @@ class SynopsisGateway:
         if self.wal is not None and rtype in ("build", "stop", "load"):
             # write-ahead, post-namespacing — replay sees exactly what
             # the engine saw (a request that fails live fails on replay
-            # too, changing nothing)
-            seq = self.wal.append_request(req)
+            # too, changing nothing). A WAL write error refuses the
+            # request instead of killing the tick.
+            try:
+                seq = self.wal.append_request(req)
+            except Exception as e:  # noqa: BLE001 - serving must survive
+                item.fut.set_result(api.Response(
+                    request_id=str(item.req.get("request_id", "")),
+                    ok=False, error=f"WAL append failed: {e!r}"))
+                return
         resp = self.sde.handle(req)
         if seq is not None:
             self.sde.wal_seq = seq

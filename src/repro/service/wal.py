@@ -4,9 +4,13 @@ The engine's snapshots (``SDE.snapshot``, incremental or full) bound
 recovery work to the last checkpoint; this module covers the tail —
 everything acked AFTER it. The serving front ends
 (``launch/sde_server.py`` JSON-lines mode and the
-``SynopsisGateway`` micro-batcher) append every state-mutating engine
-call here BEFORE applying it, and fsync before the ack leaves the
-process, so the durability contract is::
+``SynopsisGateway`` micro-batcher) append lifecycle requests BEFORE
+applying them (replay re-executes verbatim; a request that failed live
+fails identically on replay) and ingest batches AFTER a successful
+apply, keyed by the batch id the engine actually assigned — an ingest
+that fails live never reaches the log, so replay can never consume a
+batch id an acked batch owns. Either way the record is fsynced before
+the ack leaves the process, so the durability contract is::
 
     acked  =>  in the WAL  =>  recoverable
 
@@ -30,6 +34,7 @@ from __future__ import annotations
 
 import json
 import os
+import sys
 from typing import Any, Dict, List, Optional
 
 import numpy as np
@@ -55,9 +60,15 @@ class WriteAheadLog:
         self.path = path
         self.tag = tag
         self.seq = 0
+        # highest seq dropped by a truncation (a "trunc" marker record
+        # persists it, so numbering never restarts inside a lineage)
+        self._trunc_seq = 0
         if os.path.exists(path):
             for rec in read_records(path):
                 self.seq = max(self.seq, int(rec.get("seq", 0)))
+                if rec.get("kind") == "trunc":
+                    self._trunc_seq = max(self._trunc_seq,
+                                          int(rec.get("seq", 0)))
         parent = os.path.dirname(os.path.abspath(path))
         os.makedirs(parent, exist_ok=True)
         self._fh = open(path, "a", encoding="utf-8")
@@ -65,9 +76,12 @@ class WriteAheadLog:
 
     def append_ingest(self, batch: int, stream_ids, values,
                       mask=None) -> int:
-        """Log one ingest batch (pre-apply: call this BEFORE
-        ``sde.ingest``). ``batch`` is the monotonic id the engine will
-        assign — the second idempotence watermark."""
+        """Log one ingest batch. The serving front ends call this right
+        AFTER a successful ``sde.ingest`` with the batch id the engine
+        actually assigned (the second idempotence watermark), and fsync
+        before the ack leaves — so the WAL never holds a record for an
+        ingest that failed live, and batch ids in the log are exactly
+        the acked ones."""
         return self._append(dict(
             kind="ingest", batch=int(batch),
             sids=np.asarray(stream_ids, np.int64).ravel().tolist(),
@@ -96,6 +110,31 @@ class WriteAheadLog:
         self._fh.flush()
         os.fsync(self._fh.fileno())
         self._dirty = False
+
+    def truncate_through(self, seq: int) -> None:
+        """Drop every record with ``seq <=`` the watermark — they are
+        folded into a snapshot that durably landed, so replay will never
+        need them. Atomic (tmp + fsync + rename); a ``trunc`` marker
+        record persists the watermark so a reopened log resumes its
+        sequence numbering past the dropped records instead of reusing
+        them (which would make replay skip genuinely new appends)."""
+        seq = int(seq)
+        if seq <= self._trunc_seq:
+            return                       # nothing new to drop
+        self.sync()
+        keep = [r for r in read_records(self.path)
+                if int(r.get("seq", 0)) > seq]
+        tmp = self.path + ".tmp"
+        with open(tmp, "w", encoding="utf-8") as f:
+            f.write(json.dumps(dict(kind="trunc", seq=seq)) + "\n")
+            f.write("".join(json.dumps(r) + "\n" for r in keep))
+            f.flush()
+            os.fsync(f.fileno())
+        self._fh.close()
+        os.replace(tmp, self.path)
+        self._fh = open(self.path, "a", encoding="utf-8")
+        self._trunc_seq = seq
+        self.seq = max(self.seq, seq)
 
     def close(self) -> None:
         if self._fh.closed:
@@ -139,19 +178,35 @@ def replay(sde: SDE, path: str) -> int:
         seq = int(rec.get("seq", 0))
         if seq <= sde.wal_seq:
             continue
-        if rec.get("kind") == "ingest":
+        kind = rec.get("kind")
+        if kind == "ingest":
             batch = rec.get("batch")
             if batch is not None and int(batch) <= sde.batches_ingested:
                 sde.wal_seq = seq        # snapshot already folded it
                 continue
-            sde.ingest(np.asarray(rec["sids"], np.int64),
-                       np.asarray(rec["vals"], np.float32),
-                       None if rec.get("mask") is None
-                       else np.asarray(rec["mask"], bool))
-        else:
+            try:
+                sde.ingest(np.asarray(rec["sids"], np.int64),
+                           np.asarray(rec["vals"], np.float32),
+                           None if rec.get("mask") is None
+                           else np.asarray(rec["mask"], bool))
+            except Exception as e:  # noqa: BLE001 - poisoned record
+                # ingest records are logged post-apply, so a record that
+                # fails here came from a pre-fix log (logged before
+                # validation) — the live call failed too, no batch id
+                # was consumed, and recovery must not die on it
+                print(f"[wal] skipping unreplayable ingest record "
+                      f"seq={seq}: {e!r}", file=sys.stderr)
+                sde.wal_seq = seq
+                continue
+        elif kind == "req":
             # lifecycle requests re-execute verbatim; a request that
             # failed live fails identically here (no state change)
             sde.handle(rec["req"])
+        else:
+            # e.g. the "trunc" watermark marker: carries no state —
+            # just advance the seq cursor past it
+            sde.wal_seq = seq
+            continue
         sde.wal_seq = seq
         n += 1
     return n
@@ -168,7 +223,8 @@ class Checkpointer:
 
     def __init__(self, sde: SDE, directory: str, *, interval: int = 8,
                  keep: int = 3, rebase_every: int = 8,
-                 incremental: bool = True, async_: bool = True):
+                 incremental: bool = True, async_: bool = True,
+                 wal: Optional[WriteAheadLog] = None):
         from repro.training import checkpoint as ckpt
         self.sde = sde
         self.directory = directory
@@ -177,9 +233,16 @@ class Checkpointer:
         self.rebase_every = rebase_every
         self.incremental = incremental
         self.async_ = async_
+        # when given the serving WAL, records folded into a snapshot
+        # that durably landed are truncated away, bounding log growth
+        # and restart re-parse time
+        self.wal = wal
         last = ckpt.latest_step(directory)
         self.next_step = 0 if last is None else last + 1
         self._last_batches = sde.batches_ingested
+        # wal_seq covered by the previous snapshot REQUEST — promoted to
+        # a truncation watermark only once that save is known durable
+        self._last_snap_seq: Optional[int] = None
         self.snapshots = 0
 
     def maybe_snapshot(self) -> Optional[str]:
@@ -190,10 +253,28 @@ class Checkpointer:
         return self.snapshot()
 
     def snapshot(self) -> str:
+        failures = self.sde.ckpt_failures
+        seq_now = self.sde.wal_seq
         mode = self.sde.snapshot(
             self.directory, self.next_step,
             incremental=self.incremental, keep=self.keep,
             async_=self.async_, rebase_every=self.rebase_every)
+        # Truncate only through a snapshot KNOWN durable. Sync saves
+        # land before SDE.snapshot returns (a failure raises above);
+        # async saves lag one snapshot — SDE.snapshot joined the
+        # previous background write and bumped ckpt_failures if it
+        # never landed, so an unchanged counter certifies it.
+        durable_seq = None
+        if not self.async_:
+            durable_seq = seq_now
+        elif self._last_snap_seq and self.sde.ckpt_failures == failures:
+            durable_seq = self._last_snap_seq
+        if self.wal is not None and durable_seq:
+            try:
+                self.wal.truncate_through(durable_seq)
+            except OSError:
+                pass                     # rotation is best-effort only
+        self._last_snap_seq = seq_now
         self.next_step += 1
         self._last_batches = self.sde.batches_ingested
         self.snapshots += 1

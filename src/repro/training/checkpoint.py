@@ -38,9 +38,27 @@ import jax
 import numpy as np
 
 # one background save at a time per directory: a second save joins the
-# first instead of racing its tmp-dir rename and GC sweep
-_SAVE_THREADS: Dict[str, threading.Thread] = {}
-_SAVE_LOCK = threading.Lock()
+# first instead of racing its tmp-dir rename and GC sweep. The entry
+# also captures the background thread's exception — a failed async save
+# is re-raised by the NEXT save into the directory (or drained by
+# ``take_error``), never swallowed.
+class _Save:
+    __slots__ = ("thread", "error")
+
+    def __init__(self, thread: threading.Thread):
+        self.thread = thread
+        self.error: Optional[BaseException] = None
+
+
+_SAVE_THREADS: Dict[str, _Save] = {}
+# per-directory save locks: held across the join-previous / host-copy /
+# register-new sequence, so two threads calling save() concurrently can
+# never both pass the join and run overlapping write bodies
+_DIR_LOCKS: Dict[str, threading.Lock] = {}
+_SAVE_LOCK = threading.Lock()            # guards the two registries
+# fallback sweep for tmp dirs whose writer pid was reused by an
+# unrelated process: past this age they can no longer be a live save
+_TMP_MAX_AGE_S = 3600.0
 
 
 def _flatten_with_paths(tree: Any):
@@ -67,14 +85,38 @@ def _to_numpy(x) -> tuple[np.ndarray, Optional[str]]:
     return arr, None
 
 
+def _dir_lock(directory: str) -> threading.Lock:
+    with _SAVE_LOCK:
+        return _DIR_LOCKS.setdefault(os.path.abspath(directory),
+                                     threading.Lock())
+
+
+def _join(directory: str) -> Optional[_Save]:
+    with _SAVE_LOCK:
+        s = _SAVE_THREADS.get(os.path.abspath(directory))
+    if s is not None and s.thread is not threading.current_thread():
+        s.thread.join()
+    return s
+
+
 def wait(directory: str) -> None:
     """Join the in-flight background save for ``directory`` (no-op when
     idle). ``restore``/``latest_step`` call this so a reader never races
-    a half-renamed step."""
-    with _SAVE_LOCK:
-        t = _SAVE_THREADS.get(os.path.abspath(directory))
-    if t is not None and t is not threading.current_thread():
-        t.join()
+    a half-renamed step. Join only — a failed save's exception surfaces
+    from the next ``save()`` (or ``take_error``), not here."""
+    _join(directory)
+
+
+def take_error(directory: str) -> Optional[BaseException]:
+    """Join the in-flight background save and return-and-clear the
+    exception it raised (None when it landed or none ran). Callers that
+    chain state onto a prior async save (the engine's delta snapshots)
+    poll this BEFORE building on it."""
+    s = _join(directory)
+    if s is None:
+        return None
+    err, s.error = s.error, None
+    return err
 
 
 def save(state: Any, directory: str, step: int, *,
@@ -83,43 +125,57 @@ def save(state: Any, directory: str, step: int, *,
     """Atomic (optionally async) checkpoint of a pytree. The host copy
     of ``state`` happens synchronously (the caller may mutate/donate the
     arrays right after this returns); only the npz write, fsync, rename
-    and GC run on the background thread."""
-    wait(directory)                      # serialize with the prior save
-    leaves, _ = _flatten_with_paths(state)
-    host: Dict[str, np.ndarray] = {}
-    tags: Dict[str, str] = {}
-    for k, v in leaves.items():
-        host[k], tag = _to_numpy(v)
-        if tag is not None:
-            tags[k] = tag
+    and GC run on the background thread. A prior async save that FAILED
+    re-raises here (so failures are never silent); drain it first with
+    ``take_error`` to handle it yourself."""
+    with _dir_lock(directory):           # serialize with the prior save
+        prev = _join(directory)
+        if prev is not None and prev.error is not None:
+            err, prev.error = prev.error, None
+            raise RuntimeError(
+                f"previous background checkpoint into {directory} "
+                "never landed") from err
+        leaves, _ = _flatten_with_paths(state)
+        host: Dict[str, np.ndarray] = {}
+        tags: Dict[str, str] = {}
+        for k, v in leaves.items():
+            host[k], tag = _to_numpy(v)
+            if tag is not None:
+                tags[k] = tag
 
-    def _do():
-        os.makedirs(directory, exist_ok=True)
-        tmp = os.path.join(directory, f"tmp-{step}-{os.getpid()}")
-        os.makedirs(tmp, exist_ok=True)
-        np.savez(os.path.join(tmp, "leaves.npz"),
-                 **{k.replace("/", "__"): v for k, v in host.items()})
-        manifest = dict(step=step, time=time.time(),
-                        n_leaves=len(host), leaf_dtypes=tags,
-                        **(extra_manifest or {}))
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
-            f.flush()
-            os.fsync(f.fileno())
-        final = os.path.join(directory, f"step-{step:08d}")
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)
-        _gc(directory, keep)
+        def _do():
+            os.makedirs(directory, exist_ok=True)
+            tmp = os.path.join(directory, f"tmp-{step}-{os.getpid()}")
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "leaves.npz"),
+                     **{k.replace("/", "__"): v for k, v in host.items()})
+            manifest = dict(step=step, time=time.time(),
+                            n_leaves=len(host), leaf_dtypes=tags,
+                            **(extra_manifest or {}))
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            final = os.path.join(directory, f"step-{step:08d}")
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            _gc(directory, keep)
 
-    if async_:
-        t = threading.Thread(target=_do, daemon=True)
-        with _SAVE_LOCK:
-            _SAVE_THREADS[os.path.abspath(directory)] = t
-        t.start()
-        return t
-    _do()
-    return None
+        if async_:
+            def _run():
+                try:
+                    _do()
+                except BaseException as e:  # noqa: BLE001 - re-raised later
+                    entry.error = e
+
+            entry = _Save(threading.Thread(target=_run, daemon=True))
+            with _SAVE_LOCK:
+                _SAVE_THREADS[os.path.abspath(directory)] = entry
+            entry.thread.start()
+            return entry.thread
+        _do()
+        return None
 
 
 def _lineage_refs(directory: str, step_dir: str) -> set:
@@ -151,17 +207,25 @@ def _gc(directory: str, keep: int):
         if d not in protected:
             shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
     # sweep tmp dirs crashed saves left behind: tmp-<step>-<pid> whose
-    # pid is no longer alive can never be renamed into place
+    # pid is no longer alive can never be renamed into place. Age is the
+    # fallback for pid reuse — a dead writer's pid recycled by an
+    # unrelated long-lived process would otherwise pin its tmp forever.
     for d in os.listdir(directory):
         if not d.startswith("tmp-"):
             continue
+        full = os.path.join(directory, d)
         pid = d.rsplit("-", 1)[-1]
         try:
             alive = pid.isdigit() and _pid_alive(int(pid))
         except ValueError:
             alive = False
+        if alive and int(pid) != os.getpid():
+            try:
+                alive = time.time() - os.path.getmtime(full) < _TMP_MAX_AGE_S
+            except OSError:
+                continue                 # renamed/removed under us
         if not alive:
-            shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+            shutil.rmtree(full, ignore_errors=True)
 
 
 def _pid_alive(pid: int) -> bool:

@@ -10,11 +10,14 @@ device mesh; the checkpoint layer must round-trip bf16 NaN payloads,
 sweep crashed saves' tmp dirs, serialize concurrent async saves, and
 never GC a delta chain's base.
 """
+import io
 import json
 import os
 import subprocess
 import sys
 import textwrap
+import threading
+import time
 
 import jax
 import numpy as np
@@ -490,6 +493,240 @@ def test_gc_never_collects_delta_lineage(tmp_path):
     back = SDE.restore(d)                 # latest delta needs ALL of them
     _assert_engines_equal(back, eng)
     eng.close(), back.close()
+
+
+# ---------------------------------------------------------------------------
+# acked => recoverable, even against malformed requests: a refused
+# ingest never reaches the WAL (logged post-apply), replay tolerates
+# pre-fix poisoned records, and the log is truncated behind snapshots
+# ---------------------------------------------------------------------------
+def test_malformed_ingest_never_poisons_wal(tmp_path):
+    """An ingest the engine refuses (length mismatch, non-numeric
+    values) is acked with an error, serving continues, NOTHING lands in
+    the WAL, and recovery replays exactly the acked batches — the batch
+    id the bad request would have stolen goes to the next good one."""
+    from repro.launch import sde_server
+    path = str(tmp_path / "w.wal")
+    sde = SDE()
+    wal = WriteAheadLog(path)
+    out = io.StringIO()
+    reqs = [
+        {"type": "build", "request_id": "b", "synopsis_id": "cm",
+         "kind": "countmin", "params": _CM,
+         "per_stream_of_source": True, "n_streams": _N_STREAMS},
+        {"type": "ingest", "request_id": "good1",
+         "stream_ids": [1, 2], "values": [1.0, 2.0]},
+        {"type": "ingest", "request_id": "bad-mismatch",
+         "stream_ids": [1, 2, 3], "values": [1.0]},
+        {"type": "ingest", "request_id": "bad-values",
+         "stream_ids": [1], "values": ["not-a-number"]},
+        {"type": "ingest", "request_id": "good2",
+         "stream_ids": [3, 4], "values": [3.0, 4.0]},
+    ]
+    n = sde_server.serve_lines([json.dumps(r) for r in reqs], sde,
+                               out=out, wal=wal)
+    assert n == len(reqs)            # serving survived the bad batches
+    by_id = {r["request_id"]: r
+             for r in map(json.loads, out.getvalue().splitlines())
+             if r.get("request_id")}
+    assert by_id["good1"]["ok"] and by_id["good2"]["ok"]
+    assert not by_id["bad-mismatch"]["ok"]
+    assert not by_id["bad-values"]["ok"]
+    assert sde.batches_ingested == 2
+    wal.close()
+    ingests = [r for r in read_records(path) if r["kind"] == "ingest"]
+    assert [r["batch"] for r in ingests] == [1, 2]   # acked ids only
+    recovered = recover(None, path)
+    sde.flush()
+    _assert_engines_equal(recovered, sde)
+    sde.close(), recovered.close()
+
+
+def test_gateway_malformed_ingest_never_poisons_wal(tmp_path):
+    """Same contract through the micro-batching gateway: the coalesced
+    tick logs post-apply, so a tick whose every part is malformed adds
+    nothing to the WAL."""
+    import asyncio
+    from repro.service.gateway import SynopsisGateway
+    path = str(tmp_path / "w.wal")
+    wal = WriteAheadLog(path)
+    gw = SynopsisGateway(SDE(), wal=wal)
+
+    async def drive():
+        await gw.start()
+        c = gw.connect("c")
+        ok = await gw.submit(c, {
+            "type": "build", "request_id": "b", "synopsis_id": "cm",
+            "kind": "countmin", "params": _CM,
+            "per_stream_of_source": True, "n_streams": _N_STREAMS})
+        assert ok.ok, ok.error
+        bad = await gw.submit(c, {"type": "ingest", "request_id": "x",
+                                  "stream_ids": [1, 2], "values": [1.0]})
+        assert not bad.ok
+        good = await gw.submit(c, {"type": "ingest", "request_id": "g",
+                                   "stream_ids": [1], "values": [2.0]})
+        assert good.ok and good.value["batch"] == 1
+        await gw.stop()
+
+    asyncio.run(drive())
+    wal.close()
+    ingests = [r for r in read_records(path) if r["kind"] == "ingest"]
+    assert [r["batch"] for r in ingests] == [1]
+    recovered = recover(None, path)
+    assert recovered.batches_ingested == 1
+    recovered.close()
+
+
+def test_replay_tolerates_poisoned_prefix_record(tmp_path):
+    """A pre-fix WAL could hold a record for an ingest that FAILED live
+    (it was logged before validation): replay must neither crash on it
+    nor let it consume the batch id the next acked batch owns."""
+    path = str(tmp_path / "w.wal")
+    wal = WriteAheadLog(path)
+    wal.append_request(
+        {"type": "build", "request_id": "b", "synopsis_id": "cm",
+         "kind": "countmin", "params": _CM,
+         "per_stream_of_source": True, "n_streams": _N_STREAMS})
+    wal.append_ingest(1, [1, 2, 3], [1.0])       # poisoned: mismatch
+    wal.append_ingest(1, [5, 5], [1.0, 1.0])     # the REAL acked batch 1
+    wal.close()
+    eng = SDE()
+    assert replay(eng, path) == 2                # build + real batch
+    assert eng.batches_ingested == 1
+    assert eng.wal_seq == 3                      # cursor passed the poison
+    r = eng.handle({"type": "adhoc", "request_id": "q",
+                    "synopsis_id": "cm/5", "query": {"items": [5]}})
+    assert float(r.value[0]) == 2.0              # acked data not skipped
+    eng.close()
+
+
+def test_wal_truncated_after_durable_snapshot(tmp_path):
+    """The Checkpointer drops WAL records folded into a snapshot that
+    durably landed, so the log stops growing without bound — and a
+    reopened WAL resumes its numbering past the dropped records instead
+    of reusing seqs replay would then skip."""
+    from repro.launch import sde_server
+    path = str(tmp_path / "w.wal")
+    d = str(tmp_path / "ck")
+    sde = SDE()
+    wal = WriteAheadLog(path)
+    ckp = Checkpointer(sde, d, interval=2, keep=2, rebase_every=3,
+                       wal=wal)
+    rng = np.random.RandomState(21)
+    reqs = [{"type": "build", "request_id": "b", "synopsis_id": "cm",
+             "kind": "countmin", "params": _CM,
+             "per_stream_of_source": True, "n_streams": _N_STREAMS}]
+    for i in range(12):
+        sids, vals = _batch(rng, 24)
+        reqs.append({"type": "ingest", "request_id": f"i{i}",
+                     "stream_ids": [int(s) for s in sids],
+                     "values": [float(v) for v in vals]})
+    sde_server.serve_lines([json.dumps(r) for r in reqs], sde,
+                           out=io.StringIO(), wal=wal, checkpointer=ckp)
+    recs = read_records(path)
+    assert any(r.get("kind") == "trunc" for r in recs)
+    assert len([r for r in recs if r.get("kind") == "ingest"]) < 12
+    sde.wait_for_snapshot()
+    recovered = recover(d, path)
+    sde.flush()
+    _assert_engines_equal(recovered, sde)
+    wal.close()
+    wal2 = WriteAheadLog(path)               # numbering survives rotation
+    assert wal2.seq == sde.wal_seq == 13
+    wal2.close()
+    sde.close(), recovered.close()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint layer: failed background saves surface and force a fresh
+# full base; concurrent saves hold the per-directory lock; tmp age-out
+# ---------------------------------------------------------------------------
+def test_failed_async_save_forces_full_rebase(tmp_path, monkeypatch):
+    """A background delta write that dies (disk full) must not chain:
+    the next snapshot detects it, drops the broken lineage and takes a
+    FULL base that re-ships the rows the failed delta cleared."""
+    rng = np.random.RandomState(11)
+    eng = SDE()
+    _build(eng)
+    d = str(tmp_path / "ck")
+    assert eng.snapshot(d, 0, incremental=True, async_=True) == "full"
+    eng.wait_for_snapshot()
+    eng.ingest(*_batch(rng))
+    real_savez, fail = np.savez, {"on": True}
+
+    def maybe_boom(*a, **k):
+        if fail["on"]:
+            raise OSError("disk full")
+        return real_savez(*a, **k)
+
+    monkeypatch.setattr(np, "savez", maybe_boom)
+    assert eng.snapshot(d, 1, incremental=True, async_=True) == "delta"
+    eng.wait_for_snapshot()              # failure captured, not raised
+    fail["on"] = False
+    eng.ingest(*_batch(rng))
+    assert eng.snapshot(d, 2, incremental=True, async_=True) == "full"
+    assert eng.ckpt_failures == 1
+    eng.wait_for_snapshot()
+    eng.flush()
+    back = SDE.restore(d)                # latest = the recovery full
+    _assert_engines_equal(back, eng)
+    eng.close(), back.close()
+
+
+def test_failed_async_save_raises_on_next_save(tmp_path, monkeypatch):
+    d = str(tmp_path / "ck")
+    real_savez, fail = np.savez, {"on": True}
+
+    def maybe_boom(*a, **k):
+        if fail["on"]:
+            raise OSError("disk full")
+        return real_savez(*a, **k)
+
+    monkeypatch.setattr(np, "savez", maybe_boom)
+    t = ckpt.save({"x": np.arange(3)}, d, 0, async_=True)
+    t.join()
+    fail["on"] = False
+    with pytest.raises(RuntimeError, match="never landed"):
+        ckpt.save({"x": np.arange(3)}, d, 1, async_=True)
+    ckpt.save({"x": np.arange(3)}, d, 2, async_=True)  # error drained
+    ckpt.wait(d)
+    assert ckpt.latest_step(d) == 2
+
+
+def test_threaded_saves_serialize(tmp_path):
+    """save() from many threads at once: the per-directory lock keeps
+    the join-previous/register sequence atomic, so every step lands and
+    no tmp dir is orphaned by an overlapping rename/GC."""
+    d = str(tmp_path / "ck")
+    threads = [threading.Thread(
+        target=ckpt.save,
+        args=({"x": np.full(1 << 14, i, np.int32)}, d, i),
+        kwargs=dict(keep=10, async_=True)) for i in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    ckpt.wait(d)
+    steps = sorted(p for p in os.listdir(d) if p.startswith("step-"))
+    assert len(steps) == 6
+    assert not [p for p in os.listdir(d) if p.startswith("tmp-")]
+
+
+def test_stale_tmp_aged_out_despite_live_pid(tmp_path):
+    """pid reuse fallback: a tmp dir owned by a live pid that is not
+    ours is swept once it is older than the age cap — a recycled pid
+    must not pin a crashed save's tmp dir forever."""
+    d = str(tmp_path / "ck")
+    os.makedirs(d)
+    reused = os.path.join(d, "tmp-5-1")      # pid 1: always alive
+    os.makedirs(reused)
+    past = time.time() - 2 * 3600
+    os.utime(reused, (past, past))
+    fresh = os.path.join(d, "tmp-6-1")       # young: could be live
+    os.makedirs(fresh)
+    ckpt.save({"x": np.arange(3)}, d, 7)
+    assert not os.path.exists(reused)        # aged out
+    assert os.path.exists(fresh)             # too young to condemn
 
 
 def test_checkpointer_paces_and_recovers_empty(tmp_path):
