@@ -21,7 +21,7 @@ def main(argv=None) -> None:
                     help="paper-scale sizes (5000 streams)")
     ap.add_argument("--only", default=None,
                     help="comma list: fig5,fig6,fig7,fig8,fig9,fig10,"
-                         "fig11,fig12")
+                         "fig11,fig12,fig13")
     ap.add_argument("--summary", default="BENCH_summary.json",
                     help="machine-readable results file "
                          "(empty string to skip)")
@@ -29,12 +29,13 @@ def main(argv=None) -> None:
 
     from . import fig5_scalability, fig6_dft_workflow, fig7_coreset, \
         fig8_sdeaas, fig9_routing, fig10_gateway, fig11_elasticity, \
-        fig12_durability
+        fig12_durability, fig13_subpop
 
     figs = dict(fig5=fig5_scalability, fig6=fig6_dft_workflow,
                 fig7=fig7_coreset, fig8=fig8_sdeaas,
                 fig9=fig9_routing, fig10=fig10_gateway,
-                fig11=fig11_elasticity, fig12=fig12_durability)
+                fig11=fig11_elasticity, fig12=fig12_durability,
+                fig13=fig13_subpop)
     only = set(args.only.split(",")) if args.only else set(figs)
 
     results = []

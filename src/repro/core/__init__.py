@@ -17,6 +17,7 @@ from .sampler import ReservoirSampler
 from .gk import GKQuantiles
 from .coreset import CoreSetTree
 from .window import PaneWindow
+from .multidim import MultidimSpec
 from . import batched, federated  # noqa: F401
 
 for _name, _factory in {
@@ -39,5 +40,6 @@ __all__ = [
     "Synopsis", "register_kind", "make_kind", "known_kinds", "kind_params",
     "CountMin", "HyperLogLog", "AMS", "BloomFilter", "FMSketch", "DFT",
     "RHP", "LossyCounting", "StickySampling", "ReservoirSampler",
-    "GKQuantiles", "CoreSetTree", "PaneWindow", "batched", "federated",
+    "GKQuantiles", "CoreSetTree", "PaneWindow", "MultidimSpec",
+    "batched", "federated",
 ]

@@ -1,0 +1,271 @@
+"""Multidimensional subpopulation keys — attribute vectors in the 64-bit
+stream-id space (the Hydra construction of arxiv 2208.04927, adapted).
+
+The engine routes on scalar 63-bit stream ids (``service/routing.py``)
+and its fused blue path probes that key space inside the update kernels.
+This module generalizes the key WITHOUT touching any of that machinery:
+a d-dimensional attribute tuple (``{"region": "EU", "platform":
+"mobile"}``) is encoded into the SAME ``[0, 2**63)`` id space, so
+multidim groups are ordinary routed streams — ``fold64``/``split64``,
+the RouteTable and the probe-inside-the-kernel dispatch all apply
+unchanged.
+
+Encoding (Hydra-style): every dimension contributes one 64-bit hash —
+``fmix64`` of the dimension's seed combined with the attribute value's
+stable hash (blake2b for strings, fmix64 for ints); a dimension a group
+does NOT fix contributes its wildcard hash instead. The per-dimension
+hashes fold left-to-right through another fmix64 round and the result is
+masked to 63 bits. Distinct assignments collide with probability
+~ ``n_groups**2 / 2**64`` (birthday bound over the documented 63-bit
+space) — negligible against every sketch's own error.
+
+A :class:`MultidimSpec` declares the dimensions with their (finite)
+domains and materializes a **dyadic family of levels**: one group-by per
+subset of dimensions, from the all-wildcard population group (the empty
+level) down to the full cross product (the leaf level). One engine
+``build_multidim`` request allocates one synopsis per group across every
+level; each ingested record expands to its ``2**d`` group keys (one per
+level). A ``subpop_query`` — a conjunction of per-dimension predicates —
+resolves to the level that fixes EXACTLY the predicate's dimensions, and
+its covering key set is the cross product of the predicate's value
+lists: the minimal set of maintained groups whose union IS the
+subpopulation. The engine merges that covering set and estimates once,
+in a single fused dispatch (``kernels.ops.estimate_subpop``).
+"""
+from __future__ import annotations
+
+import hashlib
+import itertools
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+_MASK63 = (1 << 63) - 1
+_MASK64 = (1 << 64) - 1
+_GOLD64 = 0x9E3779B97F4A7C15
+_WILDCARD = 0xA5A5A5A55A5A5A5A     # the "dimension not fixed" sentinel
+
+# guard rails: the full dyadic family has 2**d levels and
+# prod(1 + |domain_i|) groups — keep both human-sized
+MAX_DIMS = 8
+MAX_GROUPS = 1 << 20
+
+
+def _fmix64(x: int) -> int:
+    """murmur3 fmix64 on Python ints (no numpy overflow games)."""
+    x &= _MASK64
+    x ^= x >> 33
+    x = (x * 0xFF51AFD7ED558CCD) & _MASK64
+    x ^= x >> 33
+    x = (x * 0xC4CEB9FE1A85EC53) & _MASK64
+    x ^= x >> 33
+    return x
+
+
+def _atom_hash(value: Any) -> int:
+    """Stable 64-bit hash of one attribute value. Ints hash as ints
+    (process-independent), everything else by its UTF-8 string form
+    through blake2b — NEVER Python's salted ``hash``."""
+    if isinstance(value, bool):       # bool is an int subclass; keep the
+        value = f"b:{value}"          # two types distinct anyway
+    if isinstance(value, int):
+        return _fmix64(value ^ _GOLD64)
+    digest = hashlib.blake2b(str(value).encode("utf-8"),
+                             digest_size=8).digest()
+    return int.from_bytes(digest, "little")
+
+
+class MultidimSpec:
+    """Declared dimensions + domains of one multidim synopsis family.
+
+    ``dims`` maps dimension name -> finite domain (the attribute values
+    the family groups by), in declaration order; ``levels`` is the
+    materialized subset family — every subset of the dimension names by
+    default (the full dyadic family), or an explicit list of name
+    tuples. The empty level — the population group — is always
+    materialized: the outlier workflow scores every tracked group
+    against it.
+    """
+
+    def __init__(self, dims: Dict[str, Sequence[Any]],
+                 levels: Optional[Iterable[Sequence[str]]] = None):
+        if not dims:
+            raise ValueError("multidim spec needs at least one dimension")
+        if len(dims) > MAX_DIMS:
+            raise ValueError(
+                f"{len(dims)} dimensions > MAX_DIMS={MAX_DIMS} (the "
+                "dyadic family has 2**d levels; keep d small)")
+        self.dim_names: List[str] = list(dims)
+        self.domains: Dict[str, List[Any]] = {}
+        for name, domain in dims.items():
+            vals = list(dict.fromkeys(domain))   # dedupe, keep order
+            if not vals:
+                raise ValueError(f"dimension {name!r} has an empty domain")
+            self.domains[name] = vals
+        # per-dim seeds + per-(dim, value) hashes, precomputed once
+        self._dim_seed = {name: _fmix64(_atom_hash(name) ^ (i * _GOLD64))
+                          for i, name in enumerate(self.dim_names)}
+        self._value_hash = {
+            name: {v: _fmix64(self._dim_seed[name] ^ _atom_hash(v))
+                   for v in vals}
+            for name, vals in self.domains.items()}
+        self._wild_hash = {name: _fmix64(self._dim_seed[name] ^ _WILDCARD)
+                           for name in self.dim_names}
+        # per-leaf-assignment expansion memo (ingest hot path); bounded
+        # by the leaf cross product, itself bounded by MAX_GROUPS
+        self._expand_memo: Dict[Tuple[Any, ...], List[int]] = {}
+        if levels is None:
+            lvls = [tuple(sub) for r in range(len(self.dim_names) + 1)
+                    for sub in itertools.combinations(self.dim_names, r)]
+        else:
+            lvls = []
+            for lvl in levels:
+                t = tuple(lvl)
+                for name in t:
+                    self._check_dim(name)
+                if len(set(t)) != len(t):
+                    raise ValueError(f"level {t} repeats a dimension")
+                # canonical order: declaration order of the dims
+                t = tuple(n for n in self.dim_names if n in t)
+                if t not in lvls:
+                    lvls.append(t)
+            if () not in lvls:        # the population group is mandatory
+                lvls.insert(0, ())
+        self.levels: List[Tuple[str, ...]] = lvls
+        if self.n_groups() > MAX_GROUPS:
+            raise ValueError(
+                f"{self.n_groups()} groups > MAX_GROUPS={MAX_GROUPS}; "
+                "shrink the domains or materialize fewer levels")
+
+    # -- sizes ----------------------------------------------------------
+    def n_groups(self) -> int:
+        """Total maintained groups (synopsis rows) across all levels."""
+        total = 0
+        for lvl in self.levels:
+            n = 1
+            for name in lvl:
+                n *= len(self.domains[name])
+            total += n
+        return total
+
+    # -- encoding -------------------------------------------------------
+    def _check_dim(self, name: str) -> None:
+        if name not in self.domains:
+            raise ValueError(
+                f"unknown dimension {name!r}; declared: {self.dim_names}")
+
+    def group_key(self, assignment: Dict[str, Any]) -> int:
+        """63-bit key of the group fixing exactly ``assignment``'s
+        dimensions (every other dimension is wildcard). Raises on unknown
+        dimensions or out-of-domain values."""
+        for name in assignment:
+            self._check_dim(name)
+        acc = _GOLD64
+        for name in self.dim_names:          # declaration order — stable
+            if name in assignment:
+                v = assignment[name]
+                try:
+                    h = self._value_hash[name][v]
+                except (KeyError, TypeError):
+                    raise ValueError(
+                        f"value {v!r} outside dimension {name!r}'s "
+                        f"declared domain") from None
+            else:
+                h = self._wild_hash[name]
+            acc = _fmix64((acc * _GOLD64 + h) & _MASK64)
+        return acc & _MASK63
+
+    def population_key(self) -> int:
+        """Key of the all-wildcard group (the empty level)."""
+        return self.group_key({})
+
+    def level_assignments(self, level: Sequence[str]
+                          ) -> List[Dict[str, Any]]:
+        """Every assignment of one level (cross product of its domains),
+        in deterministic declaration order."""
+        lvl = tuple(n for n in self.dim_names if n in set(level))
+        for name in level:
+            self._check_dim(name)
+        combos = itertools.product(*(self.domains[n] for n in lvl))
+        return [dict(zip(lvl, combo)) for combo in combos]
+
+    def level_keys(self, level: Sequence[str]) -> List[int]:
+        return [self.group_key(a) for a in self.level_assignments(level)]
+
+    def all_keys(self) -> List[int]:
+        """Keys of EVERY maintained group, every level — the stream-id
+        list one per-stream ``build`` request allocates."""
+        out: List[int] = []
+        for lvl in self.levels:
+            out.extend(self.level_keys(lvl))
+        return out
+
+    def expand(self, attrs: Dict[str, Any]) -> List[int]:
+        """Keys of every group one fully-assigned record belongs to —
+        one per materialized level (``2**d`` for the full family). The
+        record must assign EVERY dimension."""
+        missing = [n for n in self.dim_names if n not in attrs]
+        if missing:
+            raise ValueError(f"record is missing dimensions {missing}")
+        extra = [n for n in attrs if n not in self.domains]
+        if extra:
+            raise ValueError(f"record has unknown dimensions {extra}")
+        try:
+            leaf = tuple(attrs[n] for n in self.dim_names)
+            keys = self._expand_memo.get(leaf)
+        except TypeError:                # unhashable value: no memo
+            leaf, keys = None, None
+        if keys is None:
+            keys = [self.group_key({n: attrs[n] for n in lvl})
+                    for lvl in self.levels]
+            if leaf is not None:
+                self._expand_memo[leaf] = keys
+        return keys
+
+    def leaf_key(self, attrs: Dict[str, Any]) -> int:
+        """Key of the full-assignment (leaf) group of one record."""
+        return self.group_key({n: attrs[n] for n in self.dim_names})
+
+    # -- predicates -----------------------------------------------------
+    def covering_keys(self, where: Dict[str, Any]
+                      ) -> Tuple[Tuple[str, ...], List[int]]:
+        """Resolve a conjunction of per-dimension predicates to its
+        covering key set: ``where`` maps dimension -> value or list of
+        values; the answering level fixes EXACTLY the predicate's
+        dimensions, and the covering set is the cross product of the
+        per-dimension value lists — the minimal set of maintained groups
+        whose union is the subpopulation. Returns ``(level, keys)``."""
+        for name in where:
+            self._check_dim(name)
+        level = tuple(n for n in self.dim_names if n in where)
+        if level not in self.levels:
+            raise ValueError(
+                f"level {level} is not materialized; available levels: "
+                f"{self.levels}")
+        lists = []
+        for name in level:
+            v = where[name]
+            vals = list(v) if isinstance(v, (list, tuple)) else [v]
+            if not vals:
+                raise ValueError(f"empty predicate for dimension {name!r}")
+            lists.append([(name, x) for x in vals])
+        keys = [self.group_key(dict(combo))
+                for combo in itertools.product(*lists)]
+        return level, keys
+
+    # -- (de)serialization — snapshot manifests carry specs -------------
+    def to_json_dict(self) -> Dict[str, Any]:
+        return dict(dims={n: list(v) for n, v in self.domains.items()},
+                    levels=[list(lvl) for lvl in self.levels])
+
+    @classmethod
+    def from_json_dict(cls, obj: Dict[str, Any]) -> "MultidimSpec":
+        return cls(dict(obj["dims"]),
+                   levels=[tuple(lvl) for lvl in obj["levels"]])
+
+    def __eq__(self, other: Any) -> bool:
+        return (isinstance(other, MultidimSpec)
+                and self.domains == other.domains
+                and self.levels == other.levels)
+
+    def __repr__(self) -> str:
+        return (f"MultidimSpec(dims={self.dim_names}, "
+                f"levels={len(self.levels)}, groups={self.n_groups()})")

@@ -248,6 +248,27 @@ def note_wal_append(tag: str, n: int = 1) -> None:
     WAL_APPENDS[tag] += n
 
 
+# Subpopulation / outlier-workflow probes: ``SUBPOP_COVER_KEYS``
+# accumulates how many covering-set group keys ``subpop_query`` merged
+# per engine site — paired with DISPATCH_COUNT it pins "K maintained
+# groups answered in ONE fused dispatch". ``OUTLIER_EMITS`` counts
+# flagged subpopulations the continuous outlier workflow emitted per
+# site; tests also use it (with the entry counters) to pin that the
+# workflow rides the ALREADY-maintained synopses — zero extra builds.
+SUBPOP_COVER_KEYS: collections.Counter = collections.Counter()
+OUTLIER_EMITS: collections.Counter = collections.Counter()
+
+
+def note_subpop(site: str, n_keys: int) -> None:
+    """Record one subpop query's covering-set size."""
+    SUBPOP_COVER_KEYS[site] += int(n_keys)
+
+
+def note_outlier(site: str, n_flagged: int) -> None:
+    """Record flagged subpopulations emitted by an outlier tick."""
+    OUTLIER_EMITS[site] += int(n_flagged)
+
+
 _KIND_CACHES: list["KindCache"] = []
 
 
@@ -306,6 +327,7 @@ def kernel_cache_size() -> int:
 _ESTIMATE_ALL = KindCache("estimate_all")
 _ESTIMATE_MERGED = KindCache("estimate_merged")
 _ESTIMATE_COLLECTIVE = KindCache("estimate_collective")
+_ESTIMATE_SUBPOP = KindCache("estimate_subpop")
 
 
 def _estimate_all_fn(kind, out_sharding):
@@ -350,6 +372,42 @@ def _estimate_merged_fn(kind):
         return jax.jit(program)
 
     return _ESTIMATE_MERGED.get((kind,), build)
+
+
+def _estimate_subpop_fn(kind, n_rows, out_sharding):
+    name = type(kind).__name__
+
+    def build():
+        def program(state, rows, *query_args):
+            TRACE_COUNT[name] += 1
+            sub = jax.tree.map(lambda x: x[rows], state)
+            merged = federated.merge_reduce(kind, sub)
+            one = jax.tree.map(lambda x: x[None], merged)
+            return batched.stacked_estimate(
+                kind, one, jnp.zeros((1,), jnp.int32), *query_args)
+
+        kw = {}
+        if out_sharding is not None:
+            kw["out_shardings"] = out_sharding
+        return jax.jit(program, **kw)
+
+    return _ESTIMATE_SUBPOP.get((kind, n_rows, out_sharding), build)
+
+
+def estimate_subpop(kind, state, rows: jax.Array, *query_args,
+                    out_sharding=None):
+    """Subpopulation red path: gather a covering set of ``rows`` from a
+    kind's stack, tree-merge them (``federated.merge_reduce``) and
+    estimate the merged synopsis — ONE jitted dispatch, the
+    ``subpop_query`` analog of ``estimate_merged``. Returns a leading
+    [1] query axis. The covering set is NOT padded — padding would
+    double-count sum-merge kinds — so the program retraces per distinct
+    covering-set size (bounded by the distinct predicate shapes a
+    workload issues; the gauge is ``KERNEL_CACHE_SIZE['estimate_subpop']``).
+    """
+    DISPATCH_COUNT[type(kind).__name__] += 1
+    return _estimate_subpop_fn(kind, int(rows.shape[0]), out_sharding)(
+        state, rows, *query_args)
 
 
 def estimate_merged(kind, states_stacked, *query_args):

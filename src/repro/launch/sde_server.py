@@ -78,7 +78,7 @@ def serve_lines(lines: Iterable[str], sde: Optional[SDE] = None, *,
             req = line               # engine's handler reports the error
         seq = None
         rtype = req.get("type") if isinstance(req, dict) else None
-        if wal is not None and rtype in ("build", "stop", "load"):
+        if wal is not None and rtype in api.MUTATING_REQUESTS:
             # lifecycle: logged pre-apply (replay re-executes verbatim;
             # a request that fails live fails identically on replay). A
             # WAL write error must not kill serving — the request is
@@ -93,6 +93,18 @@ def serve_lines(lines: Iterable[str], sde: Optional[SDE] = None, *,
                 n_requests += 1
                 continue
         resp = sde.handle(req)
+        if wal is not None and rtype == "ingest_multidim" and resp.ok:
+            # multidim ingest is a data record too: logged post-apply,
+            # keyed by the engine-assigned batch id, replayed through
+            # ``sde.handle`` (the expansion is deterministic per spec)
+            try:
+                seq = wal.append_ingest_multidim(resp.value["batch"], req)
+                wal.sync()           # durable before ack
+            except Exception as e:  # noqa: BLE001 - serving must survive
+                resp = api.Response(
+                    request_id=resp.request_id, ok=False,
+                    error=f"ingested but WAL append failed: {e!r}")
+                seq = None
         if wal is not None and rtype == "ingest" and resp.ok:
             # ingest: logged POST-apply with the batch id the engine
             # actually assigned — a malformed batch the engine refused

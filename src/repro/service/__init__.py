@@ -4,13 +4,16 @@
 # workflow planner (paper Sections 3, 4, 7).
 from .api import (Request, Response, parse_request, BuildSynopsis,
                   StopSynopsis, LoadSynopsis, AdHocQuery, FederatedQuery,
-                  QueryMany, Ingest, Flush, Shutdown, StatusReport)
+                  QueryMany, Ingest, Flush, Shutdown, StatusReport,
+                  BuildMultidim, IngestMultidim, SubpopQuery,
+                  TrackOutliers, UntrackOutliers, MUTATING_REQUESTS)
 from .balancer import (Placement, PlacementDelta, estimate_workload,
                        plan_workers, worst_fit_decreasing)
 from .engine import SDE, Federation
 from .gateway import GatewayClient, SynopsisGateway, replay_log
 from .migration import (RowPayload, extract_rows, implant_rows,
                         move_rows)
+from .outliers import OutlierWorkflow, OutlierPlan
 from .pipeline import BoundedResponseLog, IngestPipeline, PendingBatch
 from .planner import Planner, WorkflowSpec
 from .reconciler import Reconciler
@@ -19,10 +22,13 @@ from .wal import WriteAheadLog, Checkpointer, recover, replay
 __all__ = ["Request", "Response", "parse_request", "BuildSynopsis",
            "StopSynopsis", "LoadSynopsis", "AdHocQuery", "FederatedQuery",
            "QueryMany", "Ingest", "Flush", "Shutdown", "StatusReport",
+           "BuildMultidim", "IngestMultidim", "SubpopQuery",
+           "TrackOutliers", "UntrackOutliers", "MUTATING_REQUESTS",
            "Placement", "PlacementDelta", "estimate_workload",
            "plan_workers", "worst_fit_decreasing",
            "SDE", "Federation", "GatewayClient", "SynopsisGateway",
            "replay_log", "RowPayload", "extract_rows", "implant_rows",
-           "move_rows", "BoundedResponseLog", "IngestPipeline",
+           "move_rows", "OutlierWorkflow", "OutlierPlan",
+           "BoundedResponseLog", "IngestPipeline",
            "PendingBatch", "Planner", "WorkflowSpec", "Reconciler",
            "WriteAheadLog", "Checkpointer", "recover", "replay"]

@@ -124,6 +124,77 @@ class Ingest(Request):
 
 
 @dataclasses.dataclass
+class BuildMultidim(Request):
+    """Build a multidimensional synopsis family in one request.
+
+    ``dims`` maps dimension name -> finite domain of attribute values;
+    ``levels`` optionally restricts the materialized group-by family to
+    the listed dimension subsets (default: every subset — the full
+    dyadic family of ``core.multidim``). The engine allocates one
+    synopsis of ``kind`` per group across every level under entry ids
+    ``<synopsis_id>/<group key>`` — ordinary per-stream entries on the
+    fused blue path.
+    """
+    synopsis_id: str = ""
+    kind: str = "countmin"
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    dims: Dict[str, List[Any]] = dataclasses.field(default_factory=dict)
+    levels: Optional[List[List[str]]] = None
+    continuous: bool = False
+
+
+@dataclasses.dataclass
+class IngestMultidim(Request):
+    """Blue-path data as attribute-tagged records: ``records[i]`` maps
+    every declared dimension to a value; the engine expands each record
+    to its per-level group keys host-side and feeds ONE fused ingest
+    per kind. ``items`` optionally carries per-record item identities
+    (user ids, ...) for item-hashing sketches (HLL/Bloom/FM/CM/AMS);
+    default is the record's leaf-group key, making coarse groups count
+    distinct leaf subpopulations."""
+    synopsis_id: str = ""
+    records: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    values: List[float] = dataclasses.field(default_factory=list)
+    mask: Optional[List[bool]] = None
+    items: Optional[List[int]] = None
+
+
+@dataclasses.dataclass
+class SubpopQuery(Request):
+    """Estimate over an arbitrary subpopulation: ``where`` is a
+    conjunction of per-dimension predicates (value or list of values per
+    dimension); the engine expands it into the covering key set of the
+    matching level and answers with ONE fused
+    merge-covering-set-then-estimate dispatch. ``query`` carries the
+    kind's usual estimate args (as in ``AdHocQuery``)."""
+    synopsis_id: str = ""
+    where: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    query: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class TrackOutliers(Request):
+    """Start a continuous outlier workflow over a multidim family: each
+    ingest tick, every group of ``level`` is estimated alongside the
+    population group — off the SAME maintained synopses, zero new
+    builds — and groups whose stat deviates from the level's mean by
+    ``threshold`` robust z-scores AND at least ``min_dev`` absolutely
+    are emitted through the continuous-response path
+    (``ow/<workflow>/<batch>``)."""
+    workflow_id: str = ""
+    synopsis_id: str = ""
+    level: Optional[List[str]] = None     # default: the leaf level
+    query: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    threshold: float = 3.0
+    min_dev: float = 0.0
+
+
+@dataclasses.dataclass
+class UntrackOutliers(Request):
+    workflow_id: str = ""
+
+
+@dataclasses.dataclass
 class Flush(Request):
     """Pipeline barrier: materialize every in-flight continuous batch
     into the engine's continuous output before the ack returns. The
@@ -178,10 +249,22 @@ _KINDS = {
     "federated_query": FederatedQuery,
     "query_many": QueryMany,
     "ingest": Ingest,
+    "build_multidim": BuildMultidim,
+    "ingest_multidim": IngestMultidim,
+    "subpop_query": SubpopQuery,
+    "track_outliers": TrackOutliers,
+    "untrack_outliers": UntrackOutliers,
     "flush": Flush,
     "shutdown": Shutdown,
     "status": StatusReport,
 }
+
+# Request types that mutate engine lifecycle state and must be
+# write-ahead logged before they are applied (the WAL's replay set —
+# ``service.wal`` re-exports this; ``ingest``/``ingest_multidim`` data
+# is logged separately POST-apply, keyed by engine batch id).
+MUTATING_REQUESTS = ("build", "stop", "load", "build_multidim",
+                     "track_outliers", "untrack_outliers")
 
 
 def parse_request(snippet: str | Dict[str, Any]) -> Request:

@@ -177,8 +177,27 @@ def worst_fit_decreasing(stream_ids: Sequence[int],
     load with input order breaking load ties (stable sort), and equally
     loaded bins hand out the LOWEST worker id first (the ``(load, id)``
     heap key), so the same estimates always produce the same placement
-    (reconcilers must not flap between equivalent plans)."""
+    (reconcilers must not flap between equivalent plans).
+
+    Duplicate candidate ids are coalesced FIRST (loads summed, first
+    occurrence fixing the order): a stream is one piece of work however
+    many times an estimator listed it. Packing duplicates separately
+    let the same id land in two bins — the dict assignment kept only
+    the last bin while BOTH loads stayed counted, so ``sum(loads)``
+    exceeded the load of the streams actually assigned and the
+    reconciler chased phantom imbalance."""
     loads_arr = np.asarray(stream_loads, np.float64)
+    if len(stream_ids) != len(loads_arr):
+        raise ValueError(
+            f"worst_fit_decreasing: {len(stream_ids)} stream_ids vs "
+            f"{len(loads_arr)} loads — the two must align 1:1")
+    merged: Dict[int, float] = {}
+    for sid, load in zip(stream_ids, loads_arr):
+        sid = int(sid)
+        merged[sid] = merged.get(sid, 0.0) + float(load)
+    stream_ids = list(merged)
+    loads_arr = np.fromiter(merged.values(), np.float64,
+                            count=len(merged))
     order = np.argsort(-loads_arr, kind="stable")
     heap: List[Tuple[float, int]] = [(0.0, w) for w in range(n_workers)]
     loads = [0.0] * n_workers

@@ -58,10 +58,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import core
 from repro.core import batched, federated
+from repro.core.multidim import MultidimSpec
 from repro.core.synopsis import Synopsis, kind_params
 from repro.kernels import ops as kops
 from repro.sharding import specs
-from . import api, migration, pipeline, routing
+from . import api, migration, outliers, pipeline, routing
 
 # dense route size of pre-hashed-routing snapshots (the old _MAX_STREAMS);
 # restore migrates these into a RouteTable
@@ -300,6 +301,13 @@ class SDE:
         # lazily after any lifecycle change so _emit_continuous issues one
         # stacked-estimate dispatch per kind, not one gather per entry
         self._cq_groups: Optional[Dict[Any, Any]] = None
+        # multidim synopsis families (family id -> key-encoding spec) and
+        # the continuous outlier workflows riding them; the per-tick
+        # outlier plans invalidate together with _cq_groups (every
+        # lifecycle mutation clears both through _invalidate_plans)
+        self.multidim: Dict[str, MultidimSpec] = {}
+        self.outliers: Dict[str, outliers.OutlierWorkflow] = {}
+        self._ow_plans: Optional[List[outliers.OutlierPlan]] = None
         # durability plumbing. Ingest routes ON DEVICE (the probe runs
         # inside the fused program), so the hot path cannot know which
         # rows a batch touched; it appends the batch's stream ids here
@@ -342,6 +350,16 @@ class SDE:
                 return self._query_many_req(req)
             if isinstance(req, api.Ingest):
                 return self._ingest_req(req)
+            if isinstance(req, api.BuildMultidim):
+                return self._build_multidim(req)
+            if isinstance(req, api.IngestMultidim):
+                return self._ingest_multidim_req(req)
+            if isinstance(req, api.SubpopQuery):
+                return self._subpop_query(req)
+            if isinstance(req, api.TrackOutliers):
+                return self._track_outliers(req)
+            if isinstance(req, api.UntrackOutliers):
+                return self._untrack_outliers(req)
             if isinstance(req, api.Flush):
                 return self._flush_req(req)
             if isinstance(req, api.Shutdown):
@@ -413,7 +431,7 @@ class SDE:
             stack.table.insert_many(
                 np.asarray([s for s, _ in routed], np.int64),
                 np.asarray([r for _, r in routed], np.int32))
-        self._cq_groups = None
+        self._invalidate_plans()
         return api.Response(request_id=req.request_id,
                             synopsis_id=req.synopsis_id,
                             params=kind_params(kind))
@@ -442,7 +460,10 @@ class SDE:
             if not any(e.kind_key == kind for e in self.entries.values()):
                 del self.stacks[kind]
                 kops.evict_kind_caches(kind)
-        self._cq_groups = None
+        # a stopped multidim family takes its key spec with it; workflows
+        # watching it go dormant (the planner skips missing families)
+        self.multidim.pop(req.synopsis_id, None)
+        self._invalidate_plans()
         return api.Response(request_id=req.request_id,
                             synopsis_id=req.synopsis_id, value=len(ids))
 
@@ -539,6 +560,192 @@ class SDE:
             value=dict(batch=batch, tuples_ingested=self.tuples_ingested,
                        in_flight=self.pending_batches))
 
+    # ------------------------------------------------------------------
+    # multidim subpopulations (tentpole): a family id maps to a
+    # MultidimSpec; every group is an ORDINARY per-stream entry
+    # (f"<family>/<group key>") on the fused blue path, so maintenance
+    # costs exactly what the same number of scalar streams would.
+    # ------------------------------------------------------------------
+    def _build_multidim(self, req: api.BuildMultidim) -> api.Response:
+        if not req.synopsis_id:
+            raise ValueError("build_multidim needs a synopsis_id")
+        if req.synopsis_id in self.multidim:
+            raise ValueError(
+                f"multidim family {req.synopsis_id!r} already exists")
+        spec = MultidimSpec(
+            req.dims,
+            levels=None if req.levels is None
+            else [tuple(lvl) for lvl in req.levels])
+        keys = spec.all_keys()
+        if len(set(keys)) != len(keys):
+            # birthday-bound 63-bit collision across the family's groups
+            # (~n^2/2^64): astronomically rare, but aliased groups would
+            # silently share one synopsis — fail loudly instead
+            raise ValueError(
+                "group-key collision inside the family; rename a "
+                "dimension or value to re-roll the hashes")
+        resp = self._build(api.BuildSynopsis(
+            request_id=req.request_id, synopsis_id=req.synopsis_id,
+            kind=req.kind, params=req.params, per_stream_of_source=True,
+            stream_ids=keys, continuous=req.continuous))
+        if resp.ok:
+            self.multidim[req.synopsis_id] = spec
+            resp.params = dict(resp.params, n_groups=spec.n_groups(),
+                               n_levels=len(spec.levels))
+        return resp
+
+    def _ingest_multidim_req(self, req: api.IngestMultidim) -> api.Response:
+        batch = self.ingest_multidim(req.synopsis_id, req.records,
+                                     req.values, req.mask, req.items)
+        return api.Response(
+            request_id=req.request_id, synopsis_id=req.synopsis_id,
+            value=dict(batch=batch, tuples_ingested=self.tuples_ingested,
+                       in_flight=self.pending_batches))
+
+    def ingest_multidim(self, synopsis_id: str, records, values,
+                        mask=None, items=None) -> int:
+        """Blue path for attribute-tagged records: expand each record to
+        its per-level group keys host-side and feed the expansion through
+        the NORMAL ``ingest`` — one fused dispatch per kind, the probe
+        untouched. ``items`` optionally carries per-record item
+        identities for item-hashing sketches; default is the record's
+        leaf-group key (so coarse groups count distinct leaf
+        subpopulations). Returns the (single) batch id."""
+        spec = self.multidim.get(synopsis_id)
+        if spec is None:
+            raise KeyError(f"unknown multidim family {synopsis_id!r}")
+        n = len(records)
+        vals = np.asarray(values, np.float32)
+        if len(vals) != n:
+            raise ValueError(
+                f"ingest_multidim mismatch: {n} records vs "
+                f"{len(vals)} values — the two must align 1:1")
+        msk = (np.ones(n, bool) if mask is None
+               else np.asarray(mask, bool))
+        if len(msk) != n:
+            raise ValueError(
+                f"ingest_multidim mismatch: {n} records vs "
+                f"{len(msk)} mask entries — the two must align 1:1")
+        if items is None:
+            its = np.asarray([spec.leaf_key(r) for r in records], np.int64)
+        else:
+            its = np.asarray(items, np.int64)
+            if len(its) != n:
+                raise ValueError(
+                    f"ingest_multidim mismatch: {n} records vs "
+                    f"{len(its)} items — the two must align 1:1")
+        lvl = len(spec.levels)
+        sids = np.fromiter(
+            (k for rec in records for k in spec.expand(rec)),
+            np.int64, count=n * lvl)
+        return self.ingest(sids, np.repeat(vals, lvl),
+                           np.repeat(msk, lvl), items=np.repeat(its, lvl))
+
+    def _subpop_query(self, req: api.SubpopQuery) -> api.Response:
+        """Estimate over an arbitrary subpopulation — the covering key
+        set of the predicate's level, merged + estimated in ONE fused
+        dispatch (``kernels.ops.estimate_subpop``)."""
+        # fence: a subpop read observes every ingested batch
+        self.flush()
+        spec = self.multidim.get(req.synopsis_id)
+        if spec is None:
+            raise KeyError(f"unknown multidim family {req.synopsis_id!r}")
+        level, keys = spec.covering_keys(req.where)
+        entries = [self.entries[f"{req.synopsis_id}/{k}"] for k in keys]
+        kind = entries[0].kind_key
+        if getattr(kind, "merge_mode", "gather") == "fresh":
+            raise ValueError(
+                f"{type(kind).__name__} replicas are exchanged, not "
+                "merged — subpop_query needs a mergeable kind")
+        args, take, errors = _plan_queries(kind, [req.query or {}])
+        if errors[0] is not None:
+            raise ValueError(errors[0])
+        stack = self.stacks[kind]
+        rows = jnp.asarray(np.asarray([e.row for e in entries], np.int32))
+        out = kops.estimate_subpop(kind, stack.state, rows, *args,
+                                   out_sharding=stack.out_sharding())
+        kops.note_subpop(self.site, len(keys))
+        return api.Response(
+            request_id=req.request_id, synopsis_id=req.synopsis_id,
+            value=take(jax.tree.map(np.asarray, out), 0),
+            params=dict(kind_params(kind), cover_keys=len(keys),
+                        level=list(level)))
+
+    def _track_outliers(self, req: api.TrackOutliers) -> api.Response:
+        if not req.workflow_id:
+            raise ValueError("track_outliers needs a workflow_id")
+        if req.workflow_id in self.outliers:
+            raise ValueError(
+                f"workflow {req.workflow_id!r} is already tracked")
+        spec = self.multidim.get(req.synopsis_id)
+        if spec is None:
+            raise KeyError(f"unknown multidim family {req.synopsis_id!r}")
+        if req.level is None:
+            level = tuple(spec.dim_names)        # the leaf level
+        else:
+            level = tuple(n for n in spec.dim_names if n in set(req.level))
+            for name in req.level:
+                spec._check_dim(name)
+        if level not in spec.levels:
+            raise ValueError(
+                f"level {level} is not materialized; available: "
+                f"{spec.levels}")
+        # the kind + query must plan cleanly NOW, not fail every tick
+        kind = self.entries[
+            f"{req.synopsis_id}/{spec.population_key()}"].kind_key
+        if getattr(kind, "merge_mode", "gather") == "fresh":
+            raise ValueError(
+                f"{type(kind).__name__} cannot back an outlier workflow "
+                "(non-mergeable replicas)")
+        _, _, errors = _plan_queries(kind, [dict(req.query or {})])
+        if errors[0] is not None:
+            raise ValueError(errors[0])
+        wf = outliers.OutlierWorkflow(
+            workflow_id=req.workflow_id, synopsis_id=req.synopsis_id,
+            level=level, query=dict(req.query or {}),
+            threshold=float(req.threshold), min_dev=float(req.min_dev))
+        self.outliers[req.workflow_id] = wf
+        self._ow_plans = None
+        return api.Response(
+            request_id=req.request_id, synopsis_id=req.workflow_id,
+            value=dict(level=list(level),
+                       n_groups=len(spec.level_assignments(level))))
+
+    def _untrack_outliers(self, req: api.UntrackOutliers) -> api.Response:
+        if req.workflow_id not in self.outliers:
+            raise KeyError(f"unknown workflow {req.workflow_id!r}")
+        del self.outliers[req.workflow_id]
+        self._ow_plans = None
+        return api.Response(request_id=req.request_id,
+                            synopsis_id=req.workflow_id, value=1)
+
+    def _plan_outliers(self) -> List[outliers.OutlierPlan]:
+        """One dispatch plan per live workflow: the level's group rows
+        plus the population row (LAST), padded like any red-path batch,
+        with the workflow's query planned once for every row. Workflows
+        whose family or entries were stopped underneath them go dormant
+        (skipped) instead of failing ingest."""
+        plans: List[outliers.OutlierPlan] = []
+        for wf in self.outliers.values():
+            spec = self.multidim.get(wf.synopsis_id)
+            if spec is None:
+                continue
+            assignments = spec.level_assignments(wf.level)
+            ids = [f"{wf.synopsis_id}/{spec.group_key(a)}"
+                   for a in assignments]
+            ids.append(f"{wf.synopsis_id}/{spec.population_key()}")
+            if any(i not in self.entries for i in ids):
+                continue
+            kind = self.entries[ids[0]].kind_key
+            rows_arr = _pad_rows([self.entries[i].row for i in ids])
+            args, take, _ = _plan_queries(
+                kind, [dict(wf.query)] * len(rows_arr))
+            plans.append(outliers.OutlierPlan(
+                workflow=wf, kind_key=kind, assignments=assignments,
+                rows=jnp.asarray(rows_arr), args=args, take=take,
+                out_sharding=self.stacks[kind].out_sharding()))
+        return plans
+
     def _flush_req(self, req: api.Flush) -> api.Response:
         drained = self.flush()
         return api.Response(
@@ -585,12 +792,14 @@ class SDE:
                     kops.REBALANCE_IMBALANCE[self.site]),
                 checkpoint_bytes=int(kops.CHECKPOINT_BYTES[self.site]),
                 dirty_rows=int(kops.DIRTY_ROWS[self.site]),
-                wal_appends=int(kops.WAL_APPENDS[self.site])))
+                wal_appends=int(kops.WAL_APPENDS[self.site]),
+                subpop_cover_keys=int(kops.SUBPOP_COVER_KEYS[self.site]),
+                outlier_emits=int(kops.OUTLIER_EMITS[self.site])))
 
     # ------------------------------------------------------------------
     # blue path: data
     # ------------------------------------------------------------------
-    def ingest(self, stream_ids, values, mask=None) -> int:
+    def ingest(self, stream_ids, values, mask=None, items=None) -> int:
         """One batch of (stream, value) tuples; updates EVERY maintained
         synopsis of every kind with EXACTLY ONE jitted, donated-buffer
         dispatch per kind stack — hashed routing probe, routed rows and
@@ -600,6 +809,12 @@ class SDE:
         (the JSON/service path hands in plain Python lists). Stream ids
         are arbitrary ints in ``[0, 2**63)``; only unrepresentable ids
         (negative, or uint64 values >= 2**63) are masked out.
+
+        ``items`` optionally decouples each tuple's ITEM identity (what
+        the item-hashing sketches — HLL/Bloom/FM/CM/AMS — hash) from its
+        ROUTING key; default is the stream id itself, the pre-multidim
+        behaviour. The multidim path threads per-record item ids through
+        here so a record's 2**d group copies all hash the same identity.
 
         Returns the batch's monotonic id — the counter that keys this
         batch's continuous responses (``cq/<synopsis>/<id>``). Eager
@@ -623,6 +838,13 @@ class SDE:
                 raise ValueError(
                     f"ingest batch mismatch: {t} stream_ids vs "
                     f"{len(mask)} mask entries — the two must align 1:1")
+        items64 = None
+        if items is not None:
+            items64 = np.asarray(items, np.int64)
+            if len(items64) != t:
+                raise ValueError(
+                    f"ingest batch mismatch: {t} stream_ids vs "
+                    f"{len(items64)} items — the two must align 1:1")
         sid64 = sid_arr.astype(np.int64)
         mask = mask & (sid64 >= 0)
         self.tuples_ingested += int(mask.sum())
@@ -638,7 +860,8 @@ class SDE:
         lo, hi = routing.split64(sid64)
         sid_lo = jnp.asarray(lo)
         sid_hi = jnp.asarray(hi)
-        items = jnp.asarray(routing.fold64(sid64))
+        items = jnp.asarray(routing.fold64(
+            sid64 if items64 is None else items64))
         vals = jnp.asarray(vals_np)
         msk = jnp.asarray(mask)
         for kind, stack in self.stacks.items():
@@ -675,7 +898,16 @@ class SDE:
             kops.evict_kind_caches(kind)
         self.stacks.clear()
         self.entries.clear()
+        self.multidim.clear()
+        self.outliers.clear()
+        self._invalidate_plans()
+
+    def _invalidate_plans(self) -> None:
+        """Drop the cached per-tick dispatch plans (continuous-query
+        groups + outlier plans) — called by EVERY lifecycle mutation;
+        both replan lazily on the next ingest."""
         self._cq_groups = None
+        self._ow_plans = None
 
     @property
     def pending_batches(self) -> int:
@@ -715,10 +947,15 @@ class SDE:
         Returns the batch's un-materialized emissions (device futures) —
         NO host sync happens here; ``_retire_batch`` materializes them
         either immediately (eager) or when the pipeline retires the
-        batch. None when no continuous queries are registered."""
+        batch. None when no continuous queries OR outlier workflows are
+        registered. Outlier ticks dispatch here too (one extra
+        ``estimate_all`` per workflow, same maintained state — zero
+        extra builds) and score host-side at retirement."""
         if self._cq_groups is None:
             self._cq_groups = self._plan_continuous()
-        if not self._cq_groups:
+        if self._ow_plans is None:
+            self._ow_plans = self._plan_outliers()
+        if not self._cq_groups and not self._ow_plans:
             return None
         emissions = []
         for kind, (ids, rows_dev, args, take, out_sh) in \
@@ -726,17 +963,34 @@ class SDE:
             out = kops.estimate_all(kind, self.stacks[kind].state,
                                     rows_dev, *args, out_sharding=out_sh)
             emissions.append((ids, take, out))
-        return pipeline.PendingBatch(batch_id, emissions)
+        extras = []
+        for plan in self._ow_plans:
+            out = kops.estimate_all(
+                plan.kind_key, self.stacks[plan.kind_key].state,
+                plan.rows, *plan.args, out_sharding=plan.out_sharding)
+            extras.append((plan, out))
+        return pipeline.PendingBatch(batch_id, emissions, extras)
 
     def _retire_batch(self, pending: pipeline.PendingBatch) -> None:
         """Materialize one batch's continuous outputs (the only
-        device→host sync of the blue path) into ``continuous_out``."""
+        device→host sync of the blue path) into ``continuous_out``,
+        then score the batch's outlier ticks (``ow/<wf>/<batch>``)."""
         for ids, take, out in pending.emissions:
             out = jax.tree.map(np.asarray, out)
             for i, sid in enumerate(ids):
                 self.continuous_out.append(api.Response(
                     request_id=f"cq/{sid}/{pending.batch_id}",
                     synopsis_id=sid, value=take(out, i)))
+        for plan, out in pending.extras:
+            out = jax.tree.map(np.asarray, out)
+            ests = [plan.take(out, i)
+                    for i in range(len(plan.assignments) + 1)]
+            payload = outliers.evaluate_tick(plan, ests)
+            kops.note_outlier(self.site, len(payload["outliers"]))
+            self.continuous_out.append(api.Response(
+                request_id=(f"ow/{plan.workflow.workflow_id}"
+                            f"/{pending.batch_id}"),
+                synopsis_id=plan.workflow.workflow_id, value=payload))
 
     def _plan_continuous(self) -> Dict[Any, Any]:
         by_kind: Dict[Any, List[Any]] = {}
@@ -802,7 +1056,7 @@ class SDE:
         for e in self.entries.values():
             if e.kind_key == kind and e.row in mapping:
                 e.row = mapping[e.row]
-        self._cq_groups = None
+        self._invalidate_plans()
         kops.note_migrated(self.site, len(mapping))
         return len(mapping)
 
@@ -834,7 +1088,7 @@ class SDE:
         stack._free = None
         stack._source_idx = None
         stack._place()
-        self._cq_groups = None
+        self._invalidate_plans()
         return stack.capacity
 
     def compact(self, kind: Any, min_capacity: int = 64) -> int:
@@ -885,7 +1139,7 @@ class SDE:
                            for e in self.entries.values()):
                     del self.stacks[kind]
                     kops.evict_kind_caches(kind)
-            self._cq_groups = None
+            self._invalidate_plans()
         return package
 
     def implant_synopses(self, package: Sequence[tuple]) -> int:
@@ -915,7 +1169,7 @@ class SDE:
                     kind_key=kind, row=row, **m)
             n += len(metas)
             kops.note_migrated(self.site, len(metas))
-        self._cq_groups = None
+        self._invalidate_plans()
         return n
 
     def _resolve_dirty(self) -> None:
@@ -962,6 +1216,10 @@ class SDE:
                                continuous=e.continuous,
                                source_id=e.source_id)
                      for sid, e in self.entries.items()},
+            multidim={sid: spec.to_json_dict()
+                      for sid, spec in self.multidim.items()},
+            outlier_workflows=[wf.to_json_dict()
+                               for wf in self.outliers.values()],
         )
 
     def snapshot(self, directory: str, step: int = 0, *,
@@ -1145,6 +1403,11 @@ class SDE:
                 federated=e["federated"],
                 responsible_site=e["responsible_site"],
                 continuous=e["continuous"], source_id=e["source_id"])
+        eng.multidim = {sid: MultidimSpec.from_json_dict(o)
+                        for sid, o in man.get("multidim", {}).items()}
+        eng.outliers = {
+            o["workflow_id"]: outliers.OutlierWorkflow.from_json_dict(o)
+            for o in man.get("outlier_workflows", [])}
         eng._ckpt_dir = directory
         eng._ckpt_base = step_
         eng._ckpt_chain = []
@@ -1224,7 +1487,12 @@ class SDE:
         self.tuples_ingested = man["tuples_ingested"]
         self.batches_ingested = man["batches_ingested"]
         self.wal_seq = man.get("wal_seq", 0)
-        self._cq_groups = None
+        self.multidim = {sid: MultidimSpec.from_json_dict(o)
+                         for sid, o in man.get("multidim", {}).items()}
+        self.outliers = {
+            o["workflow_id"]: outliers.OutlierWorkflow.from_json_dict(o)
+            for o in man.get("outlier_workflows", [])}
+        self._invalidate_plans()
 
     def merge_from(self, other: "SDE") -> None:
         """Elastic scale-down: absorb another engine's synopses.
@@ -1274,7 +1542,7 @@ class SDE:
                 other.extract_synopses(transfers, remove=False))
         self.tuples_ingested += other.tuples_ingested
         self.batches_ingested += other.batches_ingested
-        self._cq_groups = None
+        self._invalidate_plans()
 
 
 def _json_params(params):

@@ -75,6 +75,19 @@ def namespaced(tenant: str, synopsis_id: str) -> str:
     return f"{tenant}{NS_SEP}{synopsis_id}" if tenant else synopsis_id
 
 
+def check_tenant(tenant: str) -> str:
+    """Reject tenant names carrying the namespace separator: tenant
+    "a" + synopsis "b::c" would be indistinguishable from tenant
+    "a::b" + synopsis "c", silently collapsing two tenants' namespaces
+    (synopsis ids may contain "::" freely — only the LEFT side of the
+    prefix must be separator-clean for the split to stay unambiguous)."""
+    if NS_SEP in tenant:
+        raise ValueError(
+            f"tenant name {tenant!r} contains the reserved namespace "
+            f"separator {NS_SEP!r}")
+    return tenant
+
+
 def strip_ns(tenant: str, synopsis_id: str) -> str:
     prefix = tenant + NS_SEP
     if tenant and synopsis_id.startswith(prefix):
@@ -196,6 +209,7 @@ class SynopsisGateway:
     def connect(self, client_id: str, tenant: str = "") -> GatewayClient:
         if client_id in self.clients:
             raise ValueError(f"client id {client_id!r} already connected")
+        check_tenant(tenant)
         client = GatewayClient(client_id, tenant,
                                max_in_flight=self.max_in_flight,
                                log_cap=self.client_log_cap)
@@ -222,6 +236,15 @@ class SynopsisGateway:
                 error="gateway is shut down"))
             return fut
         tenant = str(req.get("tenant") or client.tenant)
+        if NS_SEP in tenant:
+            # per-request tenant overrides bypass ``connect`` — validate
+            # here too, or "a::b" would silently alias tenant "a"'s
+            # namespace (see ``check_tenant``)
+            fut.set_result(api.Response(
+                request_id=str(req.get("request_id", "")), ok=False,
+                error=f"tenant name {tenant!r} contains the reserved "
+                      f"namespace separator {NS_SEP!r}"))
+            return fut
         self._queue.append(_Item(client, tenant, dict(req), fut))
         self._arrival.set()
         return fut
@@ -480,8 +503,13 @@ class SynopsisGateway:
         if item.tenant and isinstance(req.get("synopsis_id"), str):
             req["synopsis_id"] = namespaced(item.tenant,
                                             req["synopsis_id"])
+        if item.tenant and isinstance(req.get("workflow_id"), str):
+            # outlier workflow ids live in the same per-tenant namespace
+            # as synopsis ids (their continuous responses route by them)
+            req["workflow_id"] = namespaced(item.tenant,
+                                            req["workflow_id"])
         seq = None
-        if self.wal is not None and rtype in ("build", "stop", "load"):
+        if self.wal is not None and rtype in api.MUTATING_REQUESTS:
             # write-ahead, post-namespacing — replay sees exactly what
             # the engine saw (a request that fails live fails on replay
             # too, changing nothing). A WAL write error refuses the
@@ -496,11 +524,31 @@ class SynopsisGateway:
         resp = self.sde.handle(req)
         if seq is not None:
             self.sde.wal_seq = seq
-        if resp.ok and rtype in ("build", "stop", "load"):
+        if resp.ok and rtype == "ingest_multidim" and self.wal is not None:
+            # data path: logged POST-apply keyed by the engine-assigned
+            # batch id, like coalesced ingest above
+            try:
+                self.sde.wal_seq = self.wal.append_ingest_multidim(
+                    int(resp.value["batch"]), req)
+            except Exception as e:  # noqa: BLE001 - serving must survive
+                self.commit_log.append(("request", req))
+                item.fut.set_result(api.Response(
+                    request_id=str(item.req.get("request_id", "")),
+                    ok=False,
+                    error=f"ingested but WAL append failed: {e!r}"))
+                return
+        if resp.ok and (rtype in api.MUTATING_REQUESTS
+                        or rtype == "ingest_multidim"):
             self.commit_log.append(("request", req))
-            if rtype == "build" and req.get("continuous"):
+            if (rtype in ("build", "build_multidim")
+                    and req.get("continuous")):
                 cid = str(req.get("client_id") or item.client.client_id)
                 self._subs[req.get("synopsis_id", "")] = (cid, item.tenant)
+            elif rtype == "track_outliers":
+                cid = str(req.get("client_id") or item.client.client_id)
+                self._subs[req.get("workflow_id", "")] = (cid, item.tenant)
+            elif rtype == "untrack_outliers":
+                self._subs.pop(req.get("workflow_id", ""), None)
             elif rtype == "stop":
                 dead = req.get("synopsis_id", "")
                 self._subs = {k: v for k, v in self._subs.items()

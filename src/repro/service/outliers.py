@@ -1,0 +1,127 @@
+"""Continuous outlier mining over multidim subpopulations (after the
+streaming distance-based outlier designs surveyed in arxiv 1902.07901,
+recast onto maintained synopses).
+
+A tracked workflow names one multidim family, one level of its group-by
+hierarchy and one estimate query. Each ingest tick the engine estimates
+EVERY group of that level PLUS the population group in the same batched
+red-path dispatch it already uses for continuous queries — off the SAME
+maintained synopses, so a workflow costs zero additional builds and
+zero additional blue-path work (pinned by the ``OUTLIER_EMITS`` /
+entry-count probes in the tests). The deferred estimates ride the
+ingest pipeline (``PendingBatch.extras``) and are scored host-side at
+retirement:
+
+  * every group's scalar stat is reduced from its estimate,
+  * the level's center/scale are the median and the MAD-derived robust
+    sigma (1.4826 * MAD) of the group stats — robust, so a handful of
+    true outliers cannot mask themselves by inflating a mean/stddev,
+  * a group is flagged when its |stat - center| exceeds BOTH
+    ``threshold`` robust sigmas and the absolute floor ``min_dev``
+    (the floor suppresses noise-level flags on near-constant levels,
+    where MAD collapses toward 0).
+
+One response per workflow per ingest batch (id ``ow/<workflow>/<batch>``)
+reports the flagged groups with their stats and z-scores next to the
+population estimate — deterministic for a given ingest history, which
+the determinism test locks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Tuple
+
+import numpy as np
+
+# MAD -> sigma for a normal population; the conventional robust scale
+_MAD_SIGMA = 1.4826
+_MIN_SCALE = 1e-12
+
+
+@dataclasses.dataclass
+class OutlierWorkflow:
+    """One tracked continuous outlier workflow (``track_outliers``)."""
+    workflow_id: str
+    synopsis_id: str                     # the multidim family it watches
+    level: Tuple[str, ...]               # which group-by level to score
+    query: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    threshold: float = 3.0               # robust z-score cut
+    min_dev: float = 0.0                 # absolute deviation floor
+
+    def to_json_dict(self) -> Dict[str, Any]:
+        return dict(workflow_id=self.workflow_id,
+                    synopsis_id=self.synopsis_id,
+                    level=list(self.level), query=dict(self.query),
+                    threshold=self.threshold, min_dev=self.min_dev)
+
+    @classmethod
+    def from_json_dict(cls, obj: Dict[str, Any]) -> "OutlierWorkflow":
+        return cls(workflow_id=obj["workflow_id"],
+                   synopsis_id=obj["synopsis_id"],
+                   level=tuple(obj["level"]), query=dict(obj["query"]),
+                   threshold=float(obj["threshold"]),
+                   min_dev=float(obj["min_dev"]))
+
+
+@dataclasses.dataclass
+class OutlierPlan:
+    """One workflow's per-tick dispatch plan, prepared once per
+    lifecycle epoch (invalidated together with the engine's continuous-
+    query groups). ``rows`` index the level's groups followed by the
+    population group into the kind's stack; ``take`` slices query i's
+    estimate out of the batched output."""
+    workflow: OutlierWorkflow
+    kind_key: Any                        # the frozen kind dataclass
+    assignments: List[Dict[str, Any]]    # group i's attribute assignment
+    rows: Any                            # device rows, groups + [pop]
+    args: tuple                          # stacked estimate args
+    take: Callable[..., Any]
+    out_sharding: Any = None
+
+
+def scalar_stat(est: Any) -> float:
+    """Reduce one estimate payload to a scalar: estimates are scalars or
+    small vectors (a quantile list); vectors reduce to their first
+    element (the caller controls which quantile leads the query)."""
+    arr = np.asarray(est, np.float64).ravel()
+    return float(arr[0]) if arr.size else float("nan")
+
+
+def score_level(stats: np.ndarray, threshold: float, min_dev: float
+                ) -> Tuple[np.ndarray, np.ndarray, float, float]:
+    """Robust-z scoring of one level's group stats. Returns
+    ``(flagged mask, z scores, center, scale)``; NaN stats never flag."""
+    stats = np.asarray(stats, np.float64)
+    finite = stats[np.isfinite(stats)]
+    if finite.size == 0:
+        z = np.zeros_like(stats)
+        return np.zeros(stats.shape, bool), z, float("nan"), _MIN_SCALE
+    center = float(np.median(finite))
+    scale = _MAD_SIGMA * float(np.median(np.abs(finite - center)))
+    scale = max(scale, _MIN_SCALE)
+    dev = stats - center
+    with np.errstate(invalid="ignore"):
+        z = dev / scale
+    flagged = (np.isfinite(stats)
+               & (np.abs(z) >= threshold)
+               & (np.abs(dev) >= min_dev))
+    return flagged, np.where(np.isfinite(z), z, 0.0), center, scale
+
+
+def evaluate_tick(plan: OutlierPlan, estimates: List[Any]
+                  ) -> Dict[str, Any]:
+    """Score one retired tick: ``estimates`` holds the materialized
+    per-group estimates in plan order, population LAST. Returns the
+    response payload (flagged groups + level/population context)."""
+    wf = plan.workflow
+    group_ests, pop_est = estimates[:-1], estimates[-1]
+    stats = np.asarray([scalar_stat(e) for e in group_ests], np.float64)
+    pop_stat = scalar_stat(pop_est)
+    flagged, z, center, scale = score_level(stats, wf.threshold,
+                                            wf.min_dev)
+    outliers = [dict(group=plan.assignments[i], stat=float(stats[i]),
+                     z=float(z[i]))
+                for i in np.flatnonzero(flagged)]
+    return dict(workflow_id=wf.workflow_id, level=list(wf.level),
+                outliers=outliers, n_groups=len(group_ests),
+                center=center, scale=scale, population_stat=pop_stat)

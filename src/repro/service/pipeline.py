@@ -73,12 +73,17 @@ class PendingBatch:
 
     ``emissions`` holds ``(ids, take, out)`` per kind: the continuous
     synopsis ids, the per-query result slicer from ``_plan_queries``,
-    and the (device-future) ``estimate_all`` output. Nothing here pins
-    the engine's mutable state — lifecycle changes after dispatch cannot
-    corrupt a pending batch, only delay its materialization.
+    and the (device-future) ``estimate_all`` output. ``extras`` holds
+    ``(plan, out)`` pairs for the continuous OUTLIER workflows
+    (service/outliers.py): each plan finishes host-side at retirement —
+    scoring the deferred estimates and emitting flagged groups — so
+    outlier ticks pipeline exactly like continuous queries. Nothing here
+    pins the engine's mutable state — lifecycle changes after dispatch
+    cannot corrupt a pending batch, only delay its materialization.
     """
     batch_id: int
     emissions: List[Tuple[List[str], Callable[..., Any], Any]]
+    extras: List[Tuple[Any, Any]] = dataclasses.field(default_factory=list)
 
 
 class IngestPipeline:

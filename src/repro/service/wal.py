@@ -35,16 +35,14 @@ from __future__ import annotations
 import json
 import os
 import sys
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Iterator, Optional
 
 import numpy as np
 
 from repro.kernels import ops as kops
+from .api import MUTATING_REQUESTS  # noqa: F401 — the replay set lives
+#     with the request schemata now; re-exported here for compatibility
 from .engine import SDE
-
-# request types that mutate engine state and therefore must be logged;
-# everything else (queries, status, flush) is read-only or transient
-MUTATING_REQUESTS = ("build", "stop", "load")
 
 
 class WriteAheadLog:
@@ -89,8 +87,18 @@ class WriteAheadLog:
             mask=(None if mask is None
                   else np.asarray(mask, bool).ravel().tolist())))
 
+    def append_ingest_multidim(self, batch: int,
+                               req: Dict[str, Any]) -> int:
+        """Log one multidim ingest batch (the attribute-tagged form of
+        ``append_ingest``): the raw request replays through the engine's
+        normal ``ingest_multidim`` path, which re-derives the expanded
+        group keys deterministically. Logged POST-apply with the engine
+        batch id, same contract as ``append_ingest``."""
+        return self._append(dict(kind="ingest_md", batch=int(batch),
+                                 req=dict(req)))
+
     def append_request(self, req: Dict[str, Any]) -> int:
-        """Log one lifecycle request (build/stop/load), already
+        """Log one lifecycle request (``api.MUTATING_REQUESTS``), already
         namespaced exactly as the engine will see it."""
         return self._append(dict(kind="req", req=dict(req)))
 
@@ -122,12 +130,13 @@ class WriteAheadLog:
         if seq <= self._trunc_seq:
             return                       # nothing new to drop
         self.sync()
-        keep = [r for r in read_records(self.path)
-                if int(r.get("seq", 0)) > seq]
         tmp = self.path + ".tmp"
         with open(tmp, "w", encoding="utf-8") as f:
             f.write(json.dumps(dict(kind="trunc", seq=seq)) + "\n")
-            f.write("".join(json.dumps(r) + "\n" for r in keep))
+            # stream old -> new: never materializes the kept tail
+            for r in read_records(self.path):
+                if int(r.get("seq", 0)) > seq:
+                    f.write(json.dumps(r) + "\n")
             f.flush()
             os.fsync(f.fileno())
         self._fh.close()
@@ -143,26 +152,31 @@ class WriteAheadLog:
         self._fh.close()
 
 
-def read_records(path: str) -> List[Dict[str, Any]]:
-    """Parse a WAL file. A torn FINAL record (crash mid-append, fsync
-    never completed — the ack for it never left either) is dropped; a
-    torn interior record means real corruption and raises."""
+def read_records(path: str) -> Iterator[Dict[str, Any]]:
+    """Parse a WAL file, STREAMING: yields records one line at a time so
+    recovery of a long un-truncated tail is O(1) in memory, never
+    O(log size). A torn FINAL record (crash mid-append, fsync never
+    completed — the ack for it never left either) is dropped; a torn
+    interior record means real corruption and raises — detection is
+    deferred one record (an unparseable line is held until the NEXT
+    non-empty line proves it interior), so the error surfaces during
+    iteration, not at generator creation."""
     with open(path, encoding="utf-8") as f:
-        lines = f.read().split("\n")
-    out: List[Dict[str, Any]] = []
-    for i, line in enumerate(lines):
-        line = line.strip()
-        if not line:
-            continue
-        try:
-            out.append(json.loads(line))
-        except json.JSONDecodeError:
-            if any(rest.strip() for rest in lines[i + 1:]):
+        bad_line = None
+        for lineno, raw in enumerate(f, 1):
+            line = raw.strip()
+            if not line:
+                continue
+            if bad_line is not None:
                 raise ValueError(
-                    f"corrupt WAL record at {path}:{i + 1} (not the "
+                    f"corrupt WAL record at {path}:{bad_line} (not the "
                     "final line — this is not a torn append)")
-            break                        # torn tail: never acked, drop
-    return out
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                bad_line = lineno        # torn tail unless more follows
+                continue
+            yield rec
 
 
 def replay(sde: SDE, path: str) -> int:
@@ -170,7 +184,9 @@ def replay(sde: SDE, path: str) -> int:
     records already folded into ``sde`` (``seq <= sde.wal_seq``; ingest
     batches ``<= sde.batches_ingested``), so replay is idempotent under
     duplicate/overlapping tails and exactly-once on top of any snapshot
-    of the same lineage. Returns the number of records applied."""
+    of the same lineage. Reads stream (``read_records`` is a generator),
+    so replaying an arbitrarily long tail holds one record at a time.
+    Returns the number of records applied."""
     if not os.path.exists(path):
         return 0
     n = 0
@@ -198,6 +214,12 @@ def replay(sde: SDE, path: str) -> int:
                       f"seq={seq}: {e!r}", file=sys.stderr)
                 sde.wal_seq = seq
                 continue
+        elif kind == "ingest_md":
+            batch = rec.get("batch")
+            if batch is not None and int(batch) <= sde.batches_ingested:
+                sde.wal_seq = seq        # snapshot already folded it
+                continue
+            sde.handle(rec["req"])       # normal ingest_multidim path
         elif kind == "req":
             # lifecycle requests re-execute verbatim; a request that
             # failed live fails identically here (no state change)

@@ -347,7 +347,7 @@ def test_wal_torn_tail_tolerated_interior_raises(tmp_path):
     wal.close()
     with open(path, "a") as f:
         f.write('{"seq": 3, "kind": "ing')    # crash mid-append
-    recs = read_records(path)
+    recs = list(read_records(path))
     assert [r["seq"] for r in recs] == [1, 2]  # torn tail dropped
     eng = SDE()
     eng.handle({"type": "build", "request_id": "b", "synopsis_id": "cm",
@@ -366,8 +366,87 @@ def test_wal_torn_tail_tolerated_interior_raises(tmp_path):
     with open(path, "w") as f:
         f.write("\n".join(lines))
     with pytest.raises(ValueError, match="corrupt WAL record"):
-        read_records(path)
+        list(read_records(path))         # generator: consume to detect
     eng.close()
+
+
+def test_wal_read_records_streams(tmp_path):
+    """``read_records`` is a lazy generator: records ahead of an
+    interior corruption still stream out one at a time, and the raise
+    fires exactly when iteration crosses the corrupt line — never at
+    open. A replay over a huge log holds one record, not the list."""
+    import types
+    path = str(tmp_path / "w.wal")
+    wal = WriteAheadLog(path)
+    for i in range(4):
+        wal.append_ingest(i + 1, [i], [1.0])
+    wal.close()
+    it = read_records(path)
+    assert isinstance(it, types.GeneratorType)
+    assert next(it)["seq"] == 1          # lazy: nothing else parsed yet
+    # corrupt record 3 of 4 — the good prefix must still stream
+    with open(path) as f:
+        lines = [ln for ln in f.read().split("\n") if ln]
+    lines[2] = '{"seq": broken'
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    it = read_records(path)
+    assert [next(it)["seq"], next(it)["seq"]] == [1, 2]
+    with pytest.raises(ValueError, match="corrupt WAL record"):
+        next(it)
+    # the SAME bad line as the final line is a torn append: dropped
+    with open(path, "w") as f:
+        f.write("\n".join(lines[:2] + [lines[2]]) + "\n")
+    assert [r["seq"] for r in read_records(path)] == [1, 2]
+
+
+def test_wal_recovers_multidim_ingest_and_workflows(tmp_path):
+    """Crash-recovery of the multidim plane: ``build_multidim`` /
+    ``track_outliers`` replay as lifecycle requests (pre-apply records)
+    and ``ingest_multidim`` as post-apply data records keyed by batch
+    id — the recovered engine answers the same subpop query and keeps
+    the workflow tracked."""
+    import io
+
+    from repro.launch import sde_server
+    path = str(tmp_path / "w.wal")
+    wal = WriteAheadLog(path)
+    dims = {"region": ["EU", "US"], "platform": ["web", "mobile"]}
+    recs = [{"region": "EU", "platform": "web"},
+            {"region": "US", "platform": "mobile"},
+            {"region": "EU", "platform": "mobile"}]
+    reqs = [
+        {"type": "build_multidim", "request_id": "b", "synopsis_id": "md",
+         "kind": "countmin", "params": _CM, "dims": dims},
+        {"type": "track_outliers", "request_id": "t", "workflow_id": "w",
+         "synopsis_id": "md", "level": ["region"],
+         "query": {"items": [5]}},
+        {"type": "ingest_multidim", "request_id": "i", "synopsis_id":
+         "md", "records": recs, "values": [1.0, 2.0, 3.0],
+         "items": [5, 5, 5]},
+    ]
+    sde = SDE()
+    out = io.StringIO()
+    sde_server.serve_lines([json.dumps(r) for r in reqs], sde,
+                           out=out, wal=wal)
+    assert all(json.loads(ln)["ok"]
+               for ln in out.getvalue().splitlines()
+               if json.loads(ln).get("request_id"))
+    wal.close()
+    kinds = [r.get("kind") for r in read_records(path)]
+    assert kinds == ["req", "req", "ingest_md"]
+    recovered = recover(None, path)
+    sde.flush()
+    _assert_engines_equal(recovered, sde)
+    assert recovered.multidim["md"] == sde.multidim["md"]
+    assert "w" in recovered.outliers
+    q = {"type": "subpop_query", "request_id": "q", "synopsis_id": "md",
+         "where": {"region": "EU"}, "query": {"items": [5]}}
+    np.testing.assert_allclose(np.asarray(recovered.handle(q).value),
+                               np.asarray(sde.handle(q).value))
+    # replay is idempotent: a second pass applies nothing
+    assert replay(recovered, path) == 0
+    sde.close(), recovered.close()
 
 
 try:
@@ -623,7 +702,7 @@ def test_wal_truncated_after_durable_snapshot(tmp_path):
                      "values": [float(v) for v in vals]})
     sde_server.serve_lines([json.dumps(r) for r in reqs], sde,
                            out=io.StringIO(), wal=wal, checkpointer=ckp)
-    recs = read_records(path)
+    recs = list(read_records(path))
     assert any(r.get("kind") == "trunc" for r in recs)
     assert len([r for r in recs if r.get("kind") == "ingest"]) < 12
     sde.wait_for_snapshot()

@@ -82,6 +82,71 @@ def test_tenant_namespacing_and_isolation():
     assert sorted(fr.result().value) == ["acme::cm", "globex::cm"]
 
 
+@pytest.mark.smoke
+def test_separator_bearing_tenant_names_rejected():
+    # tenant "a" + synopsis "b::c" and tenant "a::b" + synopsis "c" both
+    # namespace to "a::b::c" — a separator-bearing TENANT silently
+    # merges two tenants' namespaces, so it is refused at the door
+    gw = SynopsisGateway(SDE())
+    with pytest.raises(ValueError, match="reserved namespace separator"):
+        gw.connect("evil", tenant="a::b")
+    assert "evil" not in gw.clients
+    # the per-request tenant override is the other door in
+    c = gw.connect("c0", tenant="a")
+    f = gw.submit_nowait(c, dict(_build(), tenant="a::b"))
+    gw.tick()
+    assert not f.result().ok
+    assert "reserved namespace separator" in f.result().error
+    assert not gw.sde.entries             # nothing reached the engine
+    # SYNOPSIS ids may carry "::" freely — the split stays unambiguous
+    # because only the left side is separator-clean. Round-trip one:
+    fb = gw.submit_nowait(c, _build(synopsis_id="b::c"))
+    fi = gw.submit_nowait(c, _ingest("i", [1, 2, 3]))
+    fq = gw.submit_nowait(c, {"type": "adhoc", "request_id": "q",
+                              "synopsis_id": "b::c",
+                              "query": {"items": [1]}})
+    gw.tick()
+    assert fb.result().ok and fi.result().ok and fq.result().ok
+    assert list(gw.sde.entries) == ["a::b::c"]
+    assert fq.result().synopsis_id == "b::c"          # stripped exactly
+    assert float(np.asarray(fq.result().value).ravel()[0]) >= 1.0
+
+
+def test_outlier_workflow_routes_to_tracking_client():
+    gw = SynopsisGateway(SDE())
+    acme = gw.connect("a0", tenant="acme")
+    other = gw.connect("g0", tenant="globex")
+    fb = gw.submit_nowait(acme, {
+        "type": "build_multidim", "request_id": "b", "synopsis_id": "md",
+        "kind": "countmin", "params": CM,
+        "dims": {"region": ["EU", "US"]}})
+    ft = gw.submit_nowait(acme, {
+        "type": "track_outliers", "request_id": "t",
+        "workflow_id": "w", "synopsis_id": "md",
+        "level": ["region"], "query": {"items": [7]}, "threshold": 0.0})
+    gw.tick()
+    assert fb.result().ok, fb.result().error
+    assert ft.result().ok, ft.result().error
+    assert gw._subs["acme::w"] == ("a0", "acme")
+    fi = gw.submit_nowait(acme, {
+        "type": "ingest_multidim", "request_id": "i",
+        "synopsis_id": "md",
+        "records": [{"region": "EU"}, {"region": "US"}],
+        "values": [1.0, 1.0], "items": [7, 7]})
+    gw.tick()
+    assert fi.result().ok, fi.result().error
+    gw.sde.flush()
+    gw.tick()                             # route the retired emissions
+    out = acme.log.drain()
+    assert out and all(r.synopsis_id == "w" for r in out)
+    assert out[0].request_id.startswith("ow/w/")      # prefix stripped
+    assert not other.log.drain()
+    # commit-log replay reproduces the multidim state serially
+    replayed = replay_log(gw.commit_log)
+    _assert_states_equal(replayed, gw.sde)
+    replayed.close(), gw.sde.close()
+
+
 # ---------------------------------------------------------------------------
 # the headline invariant: 64 clients, ONE dispatch per kind per tick
 # ---------------------------------------------------------------------------

@@ -93,6 +93,33 @@ def test_wfd_lowest_worker_id_tie_rule():
         == worst_fit_decreasing(*args).assignments
 
 
+@pytest.mark.smoke
+def test_wfd_duplicate_candidates_coalesce():
+    # an estimator can list the same stream twice; packing the
+    # duplicates separately left the dict assignment holding only the
+    # LAST bin while BOTH loads stayed in the bin totals, so
+    # sum(p.loads) drifted above the load of the streams assigned
+    p = worst_fit_decreasing([7, 7, 9], [3.0, 3.0, 4.0], 2)
+    assert p.assignments == {7: 0, 9: 1}              # 7 is ONE piece
+    assert sorted(p.loads) == [4.0, 6.0]
+    # the invariant the bug broke: bin totals == assigned stream loads
+    rng = np.random.RandomState(2)
+    ids = rng.randint(0, 20, 64)                      # heavy duplication
+    loads = rng.rand(64) + 0.01
+    p = worst_fit_decreasing(ids, loads, 4)
+    assert np.isclose(sum(p.loads), loads.sum())
+    per_stream = {}
+    for s, load in zip(ids, loads):
+        per_stream[int(s)] = per_stream.get(int(s), 0.0) + float(load)
+    assert set(p.assignments) == set(per_stream)
+    for w in range(4):
+        assert np.isclose(
+            p.loads[w], sum(load for s, load in per_stream.items()
+                            if p.assignments[s] == w))
+    with pytest.raises(ValueError, match="align 1:1"):
+        worst_fit_decreasing([1, 2], [1.0], 2)
+
+
 def test_wfd_imbalance_sane():
     rng = np.random.RandomState(1)
     loads = rng.pareto(1.5, 64) + 0.01
